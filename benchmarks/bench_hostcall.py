@@ -1,0 +1,71 @@
+"""Paper §3.5: host-call round-trip overhead (the 41 us measurement).
+
+Measures the wait time on the "core" (device program) to execute a
+user-defined host call that performs no operation, from inside a jitted
+step — the io_callback analogue of the run-state spin —, plus the
+value-returning variant and the UVA read/write path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HostCallTable, UVARegistry
+
+
+def _median(fn, n=20, warmup=3):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def run() -> list:
+    rows = []
+    hct = HostCallTable()
+    noop = hct.register(lambda x: None)
+
+    @jax.jit
+    def with_call(x):
+        y = x + 1
+        hct.hostcall(noop, jnp.sum(y))
+        return y
+
+    @jax.jit
+    def without_call(x):
+        return x + 1
+
+    x = jnp.ones((64,))
+    t_with = _median(lambda: jax.block_until_ready(with_call(x)))
+    t_without = _median(lambda: jax.block_until_ready(without_call(x)))
+    rows.append(("hostcall_noop_roundtrip", (t_with - t_without) * 1e6,
+                 "us; paper measured 41us on Epiphany"))
+
+    ret = hct.register(lambda a: np.float32(a))
+
+    @jax.jit
+    def with_value(x):
+        v = hct.hostcall_value(ret, jax.ShapeDtypeStruct((), jnp.float32),
+                               jnp.sum(x))
+        return x + v
+
+    t_val = _median(lambda: jax.block_until_ready(with_value(x)))
+    rows.append(("hostcall_value_roundtrip", (t_val - t_without) * 1e6, "us"))
+
+    # UVA: ordinary-memcpy semantics vs opaque-handle copies
+    uva = UVARegistry()
+    uva.alloc("buf", (1 << 16,), np.float32)
+    data = np.arange(1 << 16, dtype=np.float32)
+    t_write = _median(lambda: uva.write("buf", data))
+    # write dirties the host view, so to_device performs the real H2D copy
+    t_h2d = _median(lambda: (uva.write("buf", data), uva.to_device("buf")))
+    rows.append(("uva_host_write_256KB", t_write * 1e6, "us"))
+    rows.append(("uva_write_plus_h2d_256KB", t_h2d * 1e6, "us"))
+    return rows

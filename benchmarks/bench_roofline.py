@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all``) and emits one row per (arch x shape x mesh): the three terms,
+dominant bottleneck, roofline fraction and MODEL_FLOPS/HLO ratio.  This is
+the benchmark backing EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_records(tag: str = "baseline"):
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        if "FAILED" in f.name:
+            continue
+        r = json.loads(f.read_text())
+        if r.get("tag", "baseline") == tag:
+            recs.append(r)
+    return recs
+
+
+def run() -> list:
+    rows = []
+    recs = load_records()
+    if not recs:
+        rows.append(("roofline_missing_dryrun", -1.0,
+                     "run: python -m repro.launch.dryrun --all"))
+        return rows
+    worst = None
+    for r in recs:
+        rf = r["roofline"]
+        name = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        rows.append((f"roofline_{name}", rf["roofline_fraction"],
+                     f"dom={rf['dominant']} compute={rf['compute_s']:.4f}s "
+                     f"mem={rf['memory_s']:.4f}s coll={rf['collective_s']:.4f}s "
+                     f"useful={r['model_flops_over_hlo']:.2f} "
+                     f"peak={r['memory']['peak_bytes_per_device'] / 1e9:.1f}GB"))
+        if worst is None or rf["roofline_fraction"] < worst[1]:
+            worst = (name, rf["roofline_fraction"])
+    n_fit = sum(r["memory"]["fits_16gb_hbm"] for r in recs)
+    rows.append(("roofline_cells_fitting_hbm", n_fit, f"of {len(recs)}"))
+    rows.append((f"roofline_worst_cell", worst[1], worst[0]))
+    return rows

@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_hostcall, bench_load_exec, bench_pipeline,
+                            bench_placement, bench_roofline, bench_treeload)
+    modules = [
+        ("load_exec(Table1+Fig2)", bench_load_exec),
+        ("placement(Table2)", bench_placement),
+        ("hostcall(S3.5)", bench_hostcall),
+        ("treeload(Fig2)", bench_treeload),
+        ("pipeline(cross-pod)", bench_pipeline),
+        ("roofline(dry-run)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in modules:
+        try:
+            for name, value, derived in mod.run():
+                print(f"{name},{value:.3f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{label},-1,ERROR {e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,45 @@
+"""Batched serving on the persistent executor (example application c).
+
+Boots the engine once, hot-loads prefill+decode programs, then serves a
+stream of requests with slot refill between decode steps.  Program registry
+stats show the paper's execution model: two compiles total, hundreds of
+re-executes.
+
+Run: PYTHONPATH=src python examples/serve_batched.py --arch qwen3-0.6b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.launch.serve import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
+                        max_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8),
+                   max_new=args.max_new)
+    stats = eng.run()
+    print("serving stats:", stats)
+    progs = eng.syscore.report()["programs"]
+    for name, p in progs.items():
+        print(f"  program {name}: compiled once ({p['compile_s']:.2f}s), "
+              f"re-executed {p['executions']}x")
+    sample = eng.completed[0]
+    print(f"  request 0 generated: {sample.generated}")
+
+
+if __name__ == "__main__":
+    main()

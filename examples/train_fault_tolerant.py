@@ -1,0 +1,68 @@
+"""End-to-end fault-tolerant training (example application b).
+
+Trains a ~25M-parameter qwen3-family model for a few hundred steps on CPU
+through the full stack: persistent executor, hostcall telemetry, periodic
+checkpoints, TWO injected node failures with automatic restart + tree-loader
+restore, deterministic data replay, straggler stats.
+
+Run:   PYTHONPATH=src python examples/train_fault_tolerant.py
+Full:  PYTHONPATH=src python examples/train_fault_tolerant.py --arch mamba2-130m --full
+       (the real 130M config; slow on one CPU core)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import train
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+# a ~25M-param decoder (same family as qwen3): big enough to show real
+# learning curves, small enough for a few hundred CPU steps
+SMALL = ModelConfig(
+    name="qwen3-25m", family="dense", n_layers=8, d_model=256, n_heads=8,
+    n_kv_heads=4, d_ff=1024, vocab_size=8192, head_dim=32, qk_norm=True,
+    rope_theta=1e6, tie_embeddings=True, dtype="float32",
+    attn_chunk_q=64, attn_chunk_k=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-25m")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ft_ckpt")
+    args = ap.parse_args()
+
+    if args.arch == "qwen3-25m":
+        # register the custom config under a module the registry can find
+        import repro.configs as configs_pkg
+        import types
+        mod = types.ModuleType("repro.configs.qwen3_25m")
+        mod.CONFIG = SMALL
+        mod.REDUCED = SMALL
+        sys.modules["repro.configs.qwen3_25m"] = mod
+        reduced = False
+    else:
+        reduced = not args.full
+
+    fail_at = [args.steps // 3, 2 * args.steps // 3]
+    print(f"training {args.arch} for {args.steps} steps; injecting node "
+          f"failures at {fail_at}")
+    res = train(args.arch, reduced=reduced, steps=args.steps,
+                global_batch=args.batch, seq_len=args.seq,
+                ckpt_dir=args.ckpt_dir, ckpt_every=25, fail_at=fail_at,
+                lr=3e-3, log_every=25)
+    print("\n=== result ===")
+    for k in ("final_step", "restarts", "first_loss", "final_loss", "wall_s",
+              "straggler", "telemetry_points"):
+        print(f"  {k}: {res[k]}")
+    assert res["restarts"] == 2 and res["final_loss"] < res["first_loss"]
+    print("fault-tolerant run converged despite 2 injected failures.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""repro.core — the paper's five contributions, TPU-native (see DESIGN.md §2).
+
+C1 placement.py      memory-placement qualifiers (usrcore/usrmem/dynamic)
+C2 syscore.py        persistent executor: hot-load / re-execute
+C3 treeload.py       O(log N) tree broadcast weight/program dissemination
+C4 dynamic_calls.py  paged weights & programs with jump table + LRU arena
+C5 hostcall.py/uva.py  host-call RPC (numbered ABI) + unified address space
+"""
+from repro.core.dynamic_calls import DCEntry, DynamicCallTable, PagedExpertStore
+from repro.core.hostcall import (CALL_CHECKPOINT_REQUEST, CALL_LOG,
+                                 CALL_METRIC, CALL_STEP_REPORT, CALL_TIME,
+                                 HostCallTable, hostcall, register_user_call)
+from repro.core.placement import (DYNAMIC, USRCORE, USRMEM, PlacedTree,
+                                  PlacementPlan, apply_plan, footprint)
+from repro.core.syscore import Program, Syscore, cold_execute
+from repro.core.treeload import (loader_cost_model, serial_load,
+                                 tree_broadcast_replicate,
+                                 tree_broadcast_stacked)
+from repro.core.uva import Buffer, UVARegistry
+
+__all__ = [
+    "DCEntry", "DynamicCallTable", "PagedExpertStore",
+    "CALL_CHECKPOINT_REQUEST", "CALL_LOG", "CALL_METRIC", "CALL_STEP_REPORT",
+    "CALL_TIME", "HostCallTable", "hostcall", "register_user_call",
+    "DYNAMIC", "USRCORE", "USRMEM", "PlacedTree", "PlacementPlan",
+    "apply_plan", "footprint",
+    "Program", "Syscore", "cold_execute",
+    "loader_cost_model", "serial_load", "tree_broadcast_replicate",
+    "tree_broadcast_stacked",
+    "Buffer", "UVARegistry",
+]

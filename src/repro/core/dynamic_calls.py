@@ -1,0 +1,162 @@
+"""dynamic_calls — on-demand paging with a jump table (paper §3.4, C4).
+
+Epiphany: functions marked ``__dynamic_call`` live in global memory; the
+first call routes through a jump table to the DC loader, which copies the
+instructions into a local arena and patches the table so later calls pay a
+single branch.  A reset invalidates the arena ("staged" applications).
+
+TPU/JAX analogue — two instantiations of the same mechanism:
+
+  * **data pages**: weights resident in HOST memory (the "global" tier) are
+    copied into device HBM (the "local" arena) on first use.  MoE experts
+    and staged layer groups are the natural page granularity; the router IS
+    the jump table.
+  * **program pages**: serialized executables installed into a Syscore on
+    first call (see ``repro.core.syscore.Syscore.install_serialized``).
+
+The arena has a byte capacity and an LRU policy with pinning; ``reset()``
+is the paper's table invalidation.  The first-call cost is the page copy;
+subsequent calls are a dict hit (the "single branch indirection").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class DCEntry:
+    name: str
+    loader: Callable[[], Any]       # host -> device materialization
+    size_bytes: int
+    pinned: bool = False
+    # populated when resident:
+    value: Optional[Any] = None
+    loaded_at: float = 0.0
+    last_use: float = 0.0
+    loads: int = 0
+    hits: int = 0
+
+
+class DynamicCallTable:
+    """Jump table + LRU arena for host-resident pages."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = int(capacity_bytes)
+        self._entries: Dict[str, DCEntry] = {}
+        self._resident_bytes = 0
+        self.evictions = 0
+
+    # -- registration (the compile-time jump-table generation) ----------------
+    def register(self, name: str, loader: Callable[[], Any],
+                 size_bytes: int, pinned: bool = False) -> DCEntry:
+        if size_bytes > self.capacity and not pinned:
+            raise ValueError(
+                f"page '{name}' ({size_bytes}B) exceeds arena capacity "
+                f"({self.capacity}B)")
+        e = DCEntry(name=name, loader=loader, size_bytes=int(size_bytes),
+                    pinned=pinned)
+        self._entries[name] = e
+        return e
+
+    def register_host_array(self, name: str, host: np.ndarray,
+                            pinned: bool = False) -> DCEntry:
+        return self.register(name, lambda: jax.device_put(host),
+                             host.nbytes, pinned=pinned)
+
+    # -- the call path ------------------------------------------------------------
+    def call(self, name: str) -> Any:
+        """Return the resident page, loading (and evicting) if needed."""
+        e = self._entries[name]
+        now = time.perf_counter()
+        if e.value is not None:           # patched-branch fast path
+            e.last_use = now
+            e.hits += 1
+            return e.value
+        self._make_room(e.size_bytes, exclude=name)
+        e.value = e.loader()
+        e.loaded_at = e.last_use = time.perf_counter()
+        e.loads += 1
+        self._resident_bytes += e.size_bytes
+        return e.value
+
+    def _make_room(self, need: int, exclude: str):
+        if need > self.capacity:
+            raise MemoryError(f"page of {need}B cannot fit arena "
+                              f"({self.capacity}B)")
+        while self._resident_bytes + need > self.capacity:
+            victims = [e for e in self._entries.values()
+                       if e.value is not None and not e.pinned
+                       and e.name != exclude]
+            if not victims:
+                raise MemoryError("arena full of pinned pages")
+            lru = min(victims, key=lambda e: e.last_use)
+            self._evict(lru)
+
+    def _evict(self, e: DCEntry):
+        e.value = None
+        self._resident_bytes -= e.size_bytes
+        self.evictions += 1
+
+    # -- management ------------------------------------------------------------
+    def reset(self):
+        """Invalidate every non-pinned page (the paper's DC table reset)."""
+        for e in self._entries.values():
+            if e.value is not None and not e.pinned:
+                self._evict(e)
+
+    def pin(self, name: str):
+        self._entries[name].pinned = True
+
+    def unpin(self, name: str):
+        self._entries[name].pinned = False
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
+
+    def resident(self):
+        return [e.name for e in self._entries.values() if e.value is not None]
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "capacity": self.capacity,
+            "resident_bytes": self._resident_bytes,
+            "evictions": self.evictions,
+            "pages": {e.name: {"size": e.size_bytes, "loads": e.loads,
+                               "hits": e.hits, "pinned": e.pinned,
+                               "resident": e.value is not None}
+                      for e in self._entries.values()},
+        }
+
+
+class PagedExpertStore:
+    """MoE-specialized DC table: experts are pages, routing stats drive
+    prefetch.  Used by the serving example to hold a model whose experts
+    exceed device memory (the paper's 'staged application' scenario)."""
+
+    def __init__(self, table: DynamicCallTable):
+        self.table = table
+        self.route_counts: Dict[str, int] = {}
+
+    def add_expert(self, layer: int, expert: int, host_weights) -> str:
+        name = f"L{layer}/E{expert}"
+        size = sum(int(np.asarray(w).nbytes) for w in
+                   jax.tree.leaves(host_weights))
+        self.table.register(
+            name, lambda hw=host_weights: jax.tree.map(jax.device_put, hw),
+            size)
+        return name
+
+    def lookup(self, layer: int, expert: int):
+        name = f"L{layer}/E{expert}"
+        self.route_counts[name] = self.route_counts.get(name, 0) + 1
+        return self.table.call(name)
+
+    def hot_set(self, k: int):
+        return sorted(self.route_counts, key=self.route_counts.get,
+                      reverse=True)[:k]

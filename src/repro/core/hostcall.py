@@ -1,0 +1,124 @@
+"""hostcall — host-call RPC infrastructure (paper §3.5, contribution C5).
+
+The Epiphany design: a call-number jump table; the core stores call number +
+register args at a host-visible location, flips a run-state bit, and spins;
+a host daemon proxies the call and signals completion.  Call-number ABI:
+
+    <512       Linux system calls, dispatched directly
+    512..1023  runtime-provided utilities
+    >=1024     user-registered functions
+
+TPU/JAX analogue: ``jax.experimental.io_callback`` (ordered, effectful) and
+``jax.pure_callback`` (value-returning) give exactly the "core blocks until
+the host daemon finishes" semantics from inside a jitted program.  The same
+numbered dispatch table is kept so programs refer to host functionality by
+call number, and user functions register with a decorator (the paper's
+"simple macro").
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SYS_RANGE = 512          # [0, 512): system calls
+RUNTIME_RANGE = 1024     # [512, 1024): runtime utilities
+# >= 1024: user-defined
+
+# -- runtime-utility call numbers -------------------------------------------
+CALL_LOG = 512
+CALL_METRIC = 513
+CALL_CHECKPOINT_REQUEST = 514
+CALL_TIME = 515
+CALL_STEP_REPORT = 516        # straggler/step-time telemetry
+CALL_DMALLOC = 517            # shared-buffer allocation through the UVA
+
+
+class HostCallTable:
+    """Numbered dispatch table + registration, shared by a Syscore."""
+
+    def __init__(self):
+        self._table: Dict[int, Callable] = {}
+        self._next_user = 1024
+        self.log_lines: list = []
+        self.metrics: Dict[str, list] = {}
+        self.step_times: list = []
+        self.checkpoint_requests: list = []
+        self._register_builtins()
+
+    # -- registration --------------------------------------------------------
+    def register(self, fn: Callable, number: Optional[int] = None) -> int:
+        if number is None:
+            number = self._next_user
+            self._next_user += 1
+        self._table[number] = fn
+        return number
+
+    def user_call(self, fn: Callable) -> int:
+        """Decorator-style registration for user host functions (>=1024)."""
+        return self.register(fn)
+
+    def _register_builtins(self):
+        # a handful of "system calls" (numbers follow the Linux x86-64 table
+        # as an homage: 1=write, 39=getpid)
+        self._table[1] = lambda fd, data: os.write(
+            int(fd), bytes(np.asarray(data, np.uint8)))
+        self._table[39] = lambda: os.getpid()
+        self._table[CALL_LOG] = self._log
+        self._table[CALL_METRIC] = self._metric
+        self._table[CALL_TIME] = lambda: time.time()
+        self._table[CALL_STEP_REPORT] = self._step_report
+        self._table[CALL_CHECKPOINT_REQUEST] = self._ckpt_request
+
+    # -- builtin impls ---------------------------------------------------------
+    def _log(self, step, value):
+        self.log_lines.append((int(step), float(value)))
+
+    def _metric(self, name_code, value):
+        self.metrics.setdefault(int(name_code), []).append(float(value))
+
+    def _step_report(self, step, wall_s):
+        self.step_times.append((int(step), float(wall_s)))
+
+    def _ckpt_request(self, step):
+        self.checkpoint_requests.append(int(step))
+
+    # -- dispatch --------------------------------------------------------------
+    def dispatch(self, number: int, *args):
+        fn = self._table.get(int(number))
+        if fn is None:
+            raise KeyError(f"hostcall {number} not registered")
+        return fn(*args)
+
+    # -- in-graph entry points ---------------------------------------------------
+    def hostcall(self, number: int, *args):
+        """Effectful host call from inside jit (no return value).
+
+        The device program blocks at this point until the host daemon has
+        executed the call — the io_callback analogue of the run-state spin."""
+        jax.experimental.io_callback(
+            lambda *a: (self.dispatch(number, *a), None)[1],
+            None, *args, ordered=True)
+
+    def hostcall_value(self, number: int, result_shape, *args):
+        """Value-returning host call (pure_callback)."""
+        return jax.pure_callback(
+            lambda *a: np.asarray(self.dispatch(number, *a),
+                                  dtype=result_shape.dtype),
+            result_shape, *args)
+
+
+GLOBAL_TABLE = HostCallTable()
+
+
+def hostcall(number: int, *args):
+    GLOBAL_TABLE.hostcall(number, *args)
+
+
+def register_user_call(fn: Callable) -> int:
+    return GLOBAL_TABLE.register(fn)

@@ -1,0 +1,143 @@
+"""placement — memory-placement qualifiers (paper §3.2/§3.4, contribution C1).
+
+Epiphany: ``_usrcore_call`` / ``_usrmem_call`` / ``__dynamic_call`` qualifiers
+let the programmer place each function in scarce local memory, slow global
+memory, or the paged arena — and Table 2 shows the footprint/latency
+trade-off of each layout.
+
+TPU analogue: per-TENSOR placement classes for model state:
+
+    usrcore  — resident in device HBM (fast, scarce)
+    usrmem   — resident in host DRAM, streamed on use (slow, abundant)
+    dynamic  — host-resident, paged into an HBM arena on demand with LRU
+               (repro.core.dynamic_calls)
+
+A :class:`PlacementPlan` maps parameter paths (regex) to classes; applying it
+partitions a pytree into the three stores and produces the Table-2-style
+footprint report.  The serving example uses it to run a model whose experts
+exceed device memory; the checkpoint module uses usrmem staging.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.dynamic_calls import DynamicCallTable
+
+USRCORE = "usrcore"
+USRMEM = "usrmem"
+DYNAMIC = "dynamic"
+CLASSES = (USRCORE, USRMEM, DYNAMIC)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclass
+class PlacementPlan:
+    """Ordered (regex -> class) rules; first match wins; default usrcore."""
+    rules: List[Tuple[str, str]] = field(default_factory=list)
+    default: str = USRCORE
+
+    def add(self, pattern: str, klass: str) -> "PlacementPlan":
+        assert klass in CLASSES, klass
+        self.rules.append((pattern, klass))
+        return self
+
+    def classify(self, path: str) -> str:
+        for pat, klass in self.rules:
+            if re.search(pat, path):
+                return klass
+        return self.default
+
+
+@dataclass
+class PlacedTree:
+    """A pytree partitioned by placement class."""
+    device: Dict[str, jax.Array]          # usrcore
+    host: Dict[str, np.ndarray]           # usrmem
+    paged: Dict[str, str]                 # dynamic: path -> DC page name
+    dc_table: Optional[DynamicCallTable]
+    treedef: Any
+    paths: List[str]
+    classes: Dict[str, str]
+
+    def get(self, path: str):
+        if path in self.device:
+            return self.device[path]
+        if path in self.paged:
+            return self.dc_table.call(self.paged[path])
+        if path in self.host:
+            # usrmem: streamed on each use (the slow 145.7 ms row of Table 2)
+            return jax.device_put(self.host[path])
+        raise KeyError(path)
+
+    def materialize(self):
+        """Full pytree with every leaf resolved (pages load on demand)."""
+        leaves = [self.get(p) for p in self.paths]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def report(self) -> Dict[str, Any]:
+        per = {k: 0 for k in CLASSES}
+        for p in self.paths:
+            k = self.classes[p]
+            if p in self.device:
+                per[USRCORE] += int(self.device[p].nbytes)
+            elif p in self.host and k == USRMEM:
+                per[USRMEM] += int(self.host[p].nbytes)
+            elif p in self.paged:
+                per[DYNAMIC] += int(np.prod(self._page_shape(p)))
+        total = sum(per.values())
+        return {"bytes": per, "total": total,
+                "fraction": {k: (v / total if total else 0.0)
+                             for k, v in per.items()}}
+
+    def _page_shape(self, path):
+        e = self.dc_table._entries[self.paged[path]]
+        return (e.size_bytes,)
+
+
+def apply_plan(tree, plan: PlacementPlan, *,
+               dc_table: Optional[DynamicCallTable] = None,
+               arena_bytes: int = 1 << 30) -> PlacedTree:
+    """Partition ``tree`` (host numpy / jax arrays) per the plan."""
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [_path_str(p) for p, _ in leaves_with_paths]
+    classes = {}
+    device: Dict[str, jax.Array] = {}
+    host: Dict[str, np.ndarray] = {}
+    paged: Dict[str, str] = {}
+    table = dc_table
+    for (path_k, leaf), path in zip(leaves_with_paths, paths):
+        klass = plan.classify(path)
+        classes[path] = klass
+        if klass == USRCORE:
+            device[path] = jax.device_put(leaf)
+        elif klass == USRMEM:
+            host[path] = np.asarray(leaf)
+        else:
+            if table is None:
+                table = DynamicCallTable(arena_bytes)
+            arr = np.asarray(leaf)
+            table.register_host_array(f"page:{path}", arr)
+            paged[path] = f"page:{path}"
+            host[path] = arr
+    return PlacedTree(device=device, host=host, paged=paged, dc_table=table,
+                      treedef=treedef, paths=paths, classes=classes)
+
+
+def footprint(tree) -> int:
+    return sum(int(np.asarray(l).nbytes) for l in jax.tree.leaves(tree))

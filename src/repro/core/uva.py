@@ -1,0 +1,107 @@
+"""uva — unified virtual address space (paper §3.5, contribution C5).
+
+The Epiphany remapping let the SAME pointer be dereferenced on host and
+coprocessor, replacing opaque read/write calls with plain ``memcpy``.  The
+JAX analogue is a *named buffer registry* that binds one logical buffer to
+its host (numpy) view and its device (jax.Array, possibly sharded) view and
+keeps them coherent on demand.  Host calls pass buffer names + offsets
+instead of opaque handles — "pointer-to-pointer" structures work because both
+sides resolve the same names.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Buffer:
+    name: str
+    host: np.ndarray                      # host view (authoritative on write)
+    device: Optional[jax.Array] = None    # device view
+    sharding: Optional[Any] = None
+    dirty_host: bool = False              # host newer than device
+    dirty_device: bool = False            # device newer than host
+
+
+class UVARegistry:
+    """name -> coherent (host, device) buffer pair with memcpy semantics."""
+
+    def __init__(self):
+        self._bufs: Dict[str, Buffer] = {}
+
+    # -- allocation (the dmalloc analogue) -----------------------------------
+    def alloc(self, name: str, shape, dtype, sharding=None) -> Buffer:
+        buf = Buffer(name=name, host=np.zeros(shape, dtype),
+                     sharding=sharding)
+        self._bufs[name] = buf
+        return buf
+
+    def bind_host(self, name: str, array: np.ndarray) -> Buffer:
+        buf = Buffer(name=name, host=np.asarray(array), dirty_host=True)
+        self._bufs[name] = buf
+        return buf
+
+    def bind_device(self, name: str, array: jax.Array) -> Buffer:
+        buf = Buffer(name=name, host=np.zeros(array.shape, array.dtype),
+                     device=array, sharding=array.sharding,
+                     dirty_device=True)
+        self._bufs[name] = buf
+        return buf
+
+    def free(self, name: str):
+        self._bufs.pop(name, None)
+
+    def __contains__(self, name):
+        return name in self._bufs
+
+    # -- memcpy-style access ---------------------------------------------------
+    def write(self, name: str, data, offset: int = 0):
+        """Plain host-side write (the paper's ordinary memcpy)."""
+        buf = self._bufs[name]
+        flat = buf.host.reshape(-1)
+        src = np.asarray(data, buf.host.dtype).reshape(-1)
+        flat[offset:offset + src.size] = src
+        buf.dirty_host = True
+
+    def read(self, name: str, count: Optional[int] = None,
+             offset: int = 0) -> np.ndarray:
+        buf = self._bufs[name]
+        self.sync_to_host(name)
+        flat = buf.host.reshape(-1)
+        if count is None:
+            return buf.host
+        return flat[offset:offset + count]
+
+    # -- coherence ---------------------------------------------------------------
+    def to_device(self, name: str, sharding=None) -> jax.Array:
+        buf = self._bufs[name]
+        if buf.device is None or buf.dirty_host or (
+                sharding is not None and sharding != buf.sharding):
+            sh = sharding if sharding is not None else buf.sharding
+            buf.device = (jax.device_put(buf.host, sh) if sh is not None
+                          else jax.device_put(buf.host))
+            buf.sharding = sh
+            buf.dirty_host = False
+        return buf.device
+
+    def update_device(self, name: str, array: jax.Array):
+        buf = self._bufs[name]
+        buf.device = array
+        buf.dirty_device = True
+
+    def sync_to_host(self, name: str) -> np.ndarray:
+        buf = self._bufs[name]
+        if buf.dirty_device and buf.device is not None:
+            buf.host = np.asarray(jax.device_get(buf.device))
+            buf.dirty_device = False
+        return buf.host
+
+    def report(self) -> Dict[str, Dict[str, Any]]:
+        return {n: {"shape": list(b.host.shape), "dtype": str(b.host.dtype),
+                    "bytes": int(b.host.nbytes),
+                    "on_device": b.device is not None}
+                for n, b in self._bufs.items()}

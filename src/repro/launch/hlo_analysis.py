@@ -1,0 +1,453 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+which under-reports FLOPs/bytes/collectives for scan-over-layers programs by
+~n_layers x (verified empirically — see EXPERIMENTS.md §Dry-run).  This module
+re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * FLOPs: every ``dot`` (2 * prod(result_dims) * prod(contracting_dims)),
+    recursing into fusions/calls, multiplying while bodies by their trip
+    count (parsed from the loop-condition constant — all our loops are
+    ``lax.scan`` counters, so the bound is a literal).
+  * bytes: per *materialized* op (fusion = one kernel: operands + result;
+    internal fusion traffic free — which is exactly the TPU kernel model).
+  * collectives: kind/bytes/replica-group per op, counts multiplied by
+    enclosing loop trips.
+
+This is a structural model, not a simulator: it feeds the three-term roofline
+in ``repro.launch.roofline``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s+([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_NO_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that must touch HBM even under perfect fusion (see Cost docstring)
+_IDEAL_TRAFFIC_OPS = {
+    "copy", "concatenate", "dynamic-update-slice", "dynamic-slice",
+    "gather", "scatter", "slice", "pad", "sort",
+}
+
+
+def _shape_dims(tok: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(tok):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class OpRec:
+    var: str
+    result: str           # raw result type string
+    opcode: str
+    rest: str              # operands + attrs raw
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpRec] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # var -> result str
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: float
+    wire_bytes: float
+    group: int
+    cross_pod: bool
+    count: float = 1.0
+
+
+@dataclass
+class Cost:
+    """bytes_cpu: operands+result for every materialized op at XLA-CPU fusion
+    granularity (pessimistic upper bound — CPU fuses far less than TPU).
+    bytes_ideal: must-touch HBM traffic under perfect elementwise fusion
+    (dots, copies, concats, slice updates, gathers, collectives) — the bound
+    the Pallas kernels realize on TPU.  Real TPU traffic lies in between;
+    the roofline memory term uses bytes_ideal (recorded in EXPERIMENTS.md)."""
+    flops: float = 0.0
+    bytes_cpu: float = 0.0
+    bytes_ideal: float = 0.0
+    collectives: List[CollectiveOp] = field(default_factory=list)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes_cpu * k, self.bytes_ideal * k,
+                    [CollectiveOp(c.kind, c.bytes, c.wire_bytes, c.group,
+                                  c.cross_pod, c.count * k)
+                     for c in self.collectives])
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes_cpu += other.bytes_cpu
+        self.bytes_ideal += other.bytes_ideal
+        self.collectives.extend(other.collectives)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        s = _COMMENT_RE.sub("", line).strip()
+        if not s:
+            continue
+        if s.startswith("ENTRY") or (s.startswith("%") and s.endswith("{")
+                                     and "=" not in s.split("(")[0]):
+            name_m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            if name_m:
+                cur = Computation(name_m.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if s.startswith("}"):
+            continue
+        m = _OP_RE.match(s)
+        if m and cur is not None:
+            rec = OpRec(var=m.group(1), result=m.group(2), opcode=m.group(3),
+                        rest=m.group(4))
+            cur.ops.append(rec)
+            cur.shapes[rec.var] = rec.result
+    return comps, entry
+
+
+def _dot_flops(rec: OpRec, comp: Computation) -> float:
+    result_elems = 1
+    for _, dims in _shape_dims(rec.result):
+        for d in dims:
+            result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rec.rest)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    operands = _OPERAND_RE.findall(rec.rest.split("),")[0] + ")")
+    contract = 1
+    if operands:
+        lhs = comp.shapes.get(operands[0])
+        if lhs:
+            dims_list = _shape_dims(lhs)
+            if dims_list:
+                dims = dims_list[0][1]
+                for c in cdims:
+                    if c < len(dims):
+                        contract *= dims[c]
+    return 2.0 * result_elems * contract
+
+
+def _operand_shapes(rec: OpRec, comp: Computation) -> List[int]:
+    # operands are the %refs before the first "),"-style attr boundary
+    head = rec.rest.split("),")[0]
+    out = []
+    for name in _OPERAND_RE.findall(head):
+        shp = comp.shapes.get(name)
+        if shp:
+            out.append(_shape_bytes(shp))
+    return out
+
+
+def _operand_bytes(rec: OpRec, comp: Computation) -> int:
+    return sum(_operand_shapes(rec, comp))
+
+
+def op_traffic(rec: OpRec, comp: Computation) -> int:
+    """HBM traffic model per op.  In-place/windowed ops move only the slice
+    they touch, NOT their (full-buffer) result shape — XLA performs
+    dynamic-update-slice in place, so counting the result would overcount by
+    the scan trip count for stacked buffers."""
+    res = _shape_bytes(rec.result)
+    ops_ = _operand_shapes(rec, comp)
+    if rec.opcode == "dynamic-update-slice":
+        upd = ops_[1] if len(ops_) > 1 else res
+        return 2 * upd
+    if rec.opcode in ("dynamic-slice", "slice", "pad", "reshape", "broadcast",
+                      "transpose", "reverse", "convert", "reduce"):
+        return 2 * res if rec.opcode != "broadcast" else res + min(ops_ or [0])
+    if rec.opcode == "gather":
+        return 2 * res
+    if rec.opcode == "scatter":
+        upd = ops_[2] if len(ops_) > 2 else res
+        return 2 * upd
+    return res + sum(ops_)
+
+
+def _trip_count(cond: Computation) -> float:
+    """Scan loops compare an s32 counter with a literal bound."""
+    best = None
+    for rec in cond.ops:
+        if rec.opcode == "constant":
+            m = _CONST_INT_RE.search(rec.result + " constant(" + rec.rest)
+            m2 = _CONST_INT_RE.search("constant(" + rec.rest)
+            val = None
+            if m2:
+                val = int(m2.group(1))
+            if val is not None:
+                best = val if best is None else max(best, val)
+    return float(best) if best else 1.0
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _crosses_pod(rest: str, group_size: int, pod_size: int) -> bool:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return len({i // pod_size for i in ids}) > 1
+    return group_size > pod_size
+
+
+def _collective(rec: OpRec, kind: str, n_devices: int,
+                pod_size: int) -> CollectiveOp:
+    result_bytes = _shape_bytes(rec.result)
+    g = _group_size(rec.rest, n_devices)
+    if kind == "all-gather":
+        wire = result_bytes * (g - 1) / max(g, 1)
+    elif kind == "reduce-scatter":
+        wire = result_bytes * (g - 1)
+    elif kind == "all-reduce":
+        wire = 2 * result_bytes * (g - 1) / max(g, 1)
+    elif kind == "all-to-all":
+        wire = result_bytes * (g - 1) / max(g, 1)
+    else:  # collective-permute
+        wire = result_bytes
+    return CollectiveOp(kind=kind, bytes=float(result_bytes),
+                        wire_bytes=float(wire), group=g,
+                        cross_pod=_crosses_pod(rec.rest, g, pod_size))
+
+
+def analyze(text: str, n_devices: int, pod_size: int = 256) -> Cost:
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # guard cycles
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        total = Cost()
+        for rec in comp.ops:
+            kind = None
+            base = rec.opcode
+            for c in _COLLECTIVES:
+                if base == c or base.startswith(c + "-"):
+                    kind = c
+                    break
+            if kind is not None and not base.endswith("-done"):
+                total.collectives.append(
+                    _collective(rec, kind, n_devices, pod_size))
+                b = _shape_bytes(rec.result)
+                total.bytes_cpu += b
+                total.bytes_ideal += b
+                continue
+            if rec.opcode == "dot":
+                total.flops += _dot_flops(rec, comp)
+                b = _shape_bytes(rec.result) + _operand_bytes(rec, comp)
+                total.bytes_cpu += b
+                total.bytes_ideal += b
+                continue
+            if rec.opcode == "fusion":
+                m = _CALLS_RE.search(rec.rest)
+                if m:
+                    inner = comp_cost(m.group(1))
+                    total.flops += inner.flops
+                    total.bytes_ideal += inner.bytes_ideal
+                    total.collectives.extend(inner.collectives)
+                total.bytes_cpu += _shape_bytes(rec.result) + _operand_bytes(
+                    rec, comp)
+                continue
+            if rec.opcode == "while":
+                bm = _BODY_RE.search(rec.rest)
+                cm = _COND_RE.search(rec.rest)
+                trips = _trip_count(comps[cm.group(1)]) if (
+                    cm and cm.group(1) in comps) else 1.0
+                if bm and bm.group(1) in comps:
+                    total.add(comp_cost(bm.group(1)).scaled(trips))
+                continue
+            if rec.opcode in ("call", "async-start", "custom-call"):
+                m = _CALLS_RE.search(rec.rest)
+                if m and m.group(1) in comps:
+                    total.add(comp_cost(m.group(1)))
+                else:
+                    b = _shape_bytes(rec.result) + _operand_bytes(rec, comp)
+                    total.bytes_cpu += b
+                    total.bytes_ideal += b
+                continue
+            if rec.opcode == "conditional":
+                m = _BRANCHES_RE.search(rec.rest)
+                if m:
+                    branch_costs = [comp_cost(b.strip().lstrip("%"))
+                                    for b in m.group(1).split(",")]
+                    if branch_costs:
+                        total.add(max(branch_costs, key=lambda c: c.flops))
+                continue
+            if rec.opcode in _NO_BYTES_OPS:
+                continue
+            # generic materialized op (copy/convert/reshape/broadcast/...)
+            b = op_traffic(rec, comp)
+            total.bytes_cpu += b
+            if rec.opcode in _IDEAL_TRAFFIC_OPS:
+                total.bytes_ideal += b
+        memo[name] = total
+        return total
+
+    # fusions/while bodies are reached via call edges from ENTRY only
+    return comp_cost(entry) if entry else Cost()
+
+
+def cpu_upcast_artifact_bytes(text: str, min_bytes: int = 64 << 20) -> int:
+    """Bytes of large f32 buffers created by the CPU backend's bf16->f32 dot
+    upcasting (XLA-CPU has no native bf16 matmul, so it inserts converts and
+    hoists them out of loops, materializing f32 copies of whole stacked
+    weight/cache buffers).  A TPU build executes these dots natively in bf16 —
+    these temporaries do not exist there.
+
+    Estimator: ENTRY-scope convert/fusion/copy ops producing an f32 result
+    >= min_bytes that take a bf16 operand with the SAME element count (a pure
+    upcast of an existing buffer).  Used for the adjusted per-device peak
+    reported next to the raw one (EXPERIMENTS.md §Dry-run)."""
+    comps, entry = parse_hlo(text)
+    if entry is None or entry not in comps:
+        return 0
+    comp = comps[entry]
+
+    def elems(tok: str) -> int:
+        total = 0
+        for _, dims in _shape_dims(tok):
+            n = 1
+            for d in dims:
+                n *= d
+            total += n
+        return total
+
+    total = 0
+    for rec in comp.ops:
+        if rec.opcode not in ("convert", "fusion", "copy"):
+            continue
+        if not rec.result.strip().startswith("f32["):
+            continue
+        b = _shape_bytes(rec.result)
+        if b < min_bytes:
+            continue
+        n_out = elems(rec.result)
+        head = rec.rest.split("),")[0]
+        for name in _OPERAND_RE.findall(head):
+            shp = comp.shapes.get(name, "")
+            if shp.strip().startswith("bf16[") and elems(shp) == n_out:
+                total += b
+                break
+    return total
+
+
+def ideal_bytes_by_opcode(text: str, n_devices: int) -> Dict[str, float]:
+    """Loop-aware attribution of bytes_ideal by opcode (perf-debug aid)."""
+    comps, entry = parse_hlo(text)
+    acc: Dict[str, float] = {}
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for rec in comp.ops:
+            if rec.opcode == "while":
+                bm = _BODY_RE.search(rec.rest)
+                cm = _COND_RE.search(rec.rest)
+                trips = _trip_count(comps[cm.group(1)]) if (
+                    cm and cm.group(1) in comps) else 1.0
+                if bm and bm.group(1) in comps:
+                    walk(bm.group(1), mult * trips)
+                continue
+            if rec.opcode == "fusion":
+                m = _CALLS_RE.search(rec.rest)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            if rec.opcode == "dot":
+                b = _shape_bytes(rec.result) + _operand_bytes(rec, comp)
+                acc["dot"] = acc.get("dot", 0.0) + b * mult
+                continue
+            for c in _COLLECTIVES:
+                if rec.opcode == c or rec.opcode.startswith(c + "-"):
+                    b = _shape_bytes(rec.result)
+                    acc[c] = acc.get(c, 0.0) + b * mult
+                    break
+            else:
+                if rec.opcode in _IDEAL_TRAFFIC_OPS:
+                    b = op_traffic(rec, comp)
+                    acc[rec.opcode] = acc.get(rec.opcode, 0.0) + b * mult
+
+    if entry:
+        walk(entry, 1.0)
+    return acc
+
+
+def summarize_collectives(cost: Cost) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for c in cost.collectives:
+        k = out.setdefault(c.kind, {"count": 0.0, "bytes": 0.0,
+                                    "wire_bytes": 0.0})
+        k["count"] += c.count
+        k["bytes"] += c.bytes * c.count
+        k["wire_bytes"] += c.wire_bytes * c.count
+    return out
+
+
+def wire_bytes_split(cost: Cost) -> Tuple[float, float]:
+    intra = sum(c.wire_bytes * c.count for c in cost.collectives
+                if not c.cross_pod)
+    cross = sum(c.wire_bytes * c.count for c in cost.collectives
+                if c.cross_pod)
+    return intra, cross

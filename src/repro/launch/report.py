@@ -1,0 +1,63 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+DRYRUN = Path("results/dryrun")
+
+
+def load(tag=None):
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        if "FAILED" in f.name:
+            continue
+        r = json.loads(f.read_text())
+        if tag is None or r.get("tag") == tag:
+            recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def roofline_table(recs):
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | dominant "
+           "| peak GB (adj) | fits | useful |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rf = r["roofline"]
+        m = r["memory"]
+        adj = m.get("peak_adjusted_tpu", m["peak_bytes_per_device"])
+        fits = "Y" if m.get("fits_16gb_hbm_adjusted",
+                            m["fits_16gb_hbm"]) else "N"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {m['peak_bytes_per_device'] / 1e9:.1f} ({adj / 1e9:.1f}) "
+            f"| {fits} | {r['model_flops_over_hlo']:.2f} |")
+    return "\n".join(lines)
+
+
+def collective_summary(rec):
+    out = []
+    for k, v in sorted(rec["collectives"]["by_kind"].items()):
+        out.append(f"{k}: n={v['count']:.0f} wire={v['wire_bytes'] / 1e9:.1f}GB")
+    return "; ".join(out)
+
+
+def main():
+    recs = load(tag="baseline")
+    print(roofline_table(recs))
+    print()
+    for r in recs:
+        if r["shape"] == "train_4k" and r["mesh"] == "16x16":
+            print(f"{r['arch']}: {collective_summary(r)}")
+
+
+if __name__ == "__main__":
+    main()

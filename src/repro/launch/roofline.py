@@ -1,0 +1,155 @@
+"""Roofline derivation from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
+
+  compute    = per-device HLO FLOPs / peak FLOP/s
+  memory     = per-device HLO bytes accessed / HBM bandwidth
+  collective = per-device wire bytes / (ICI links x link bandwidth)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (verified per-device,
+post-SPMD on the CPU backend).  Collective wire bytes are parsed from the
+compiled HLO text: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we take the operand/result shapes and apply
+the standard ring cost model with the op's replica-group size g:
+
+  all-gather      (n-1)/n * result_bytes          (result is the full tensor)
+  reduce-scatter  (n-1)/n * operand_bytes
+  all-reduce      2 (n-1)/n * operand_bytes       (RS + AG)
+  all-to-all      (n-1)/n * operand_bytes
+  collective-permute  operand_bytes
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (we credit 3 usable link-pairs per chip on a 2D torus
+slice for intra-pod collectives — conservative single-direction figure —
+and 1 effective link for the cross-pod axis).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link
+INTRA_POD_LINKS = 3          # usable concurrent links per chip (v5e 2D torus)
+CROSS_POD_LINKS = 1
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.  f32[16,128]{1,0}  or bf16[8,4096,128]
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)   # iota form [num_groups,group_size]
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    ops: List[Dict[str, Any]] = field(default_factory=list)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(o["wire_bytes"] for o in self.ops)
+
+    def by_kind(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for o in self.ops:
+            k = out.setdefault(o["kind"], {"count": 0, "bytes": 0.0,
+                                           "wire_bytes": 0.0})
+            k["count"] += 1
+            k["bytes"] += o["bytes"]
+            k["wire_bytes"] += o["wire_bytes"]
+        return out
+
+
+def _crosses_pod(line: str, group_size: int, pod_size: int) -> bool:
+    """True when the op's replica group spans pods (ids from both halves)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return len({i // pod_size for i in ids}) > 1
+    return group_size > pod_size  # iota groups: contiguous assumption
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      pod_size: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        result_bytes = _shape_bytes(m.group(1))
+        g = _group_size(ls, n_devices)
+        if kind == "all-gather":
+            wire = result_bytes * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (g - 1)          # operand = result * g
+        elif kind == "all-reduce":
+            wire = 2 * result_bytes * (g - 1) / max(g, 1)
+        elif kind == "all-to-all":
+            wire = result_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = result_bytes
+        stats.ops.append({"kind": kind, "bytes": float(result_bytes),
+                          "group": g, "wire_bytes": float(wire),
+                          "cross_pod": _crosses_pod(ls, g, pod_size)})
+    return stats
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_intra: float, wire_bytes_cross: float = 0.0,
+                   ) -> Dict[str, float]:
+    compute = flops_per_dev / PEAK_FLOPS
+    memory = bytes_per_dev / HBM_BW
+    collective = (wire_bytes_intra / (INTRA_POD_LINKS * ICI_LINK_BW)
+                  + wire_bytes_cross / (CROSS_POD_LINKS * ICI_LINK_BW))
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+    }

@@ -1,0 +1,225 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium: speech enc + text dec).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d) straight into the encoder.  The
+decoder is a standard causal transformer with cross-attention; at prefill the
+cross K/V are computed once from the encoder memory and cached (so decode
+steps never touch the encoder).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_embedding, apply_lm_head, apply_mlp,
+                                 apply_rmsnorm, apply_rope, embedding_abstract,
+                                 mlp_abstract, rmsnorm_abstract)
+from repro.models.transformer import (_attn_abstract, _attn_cache_abstract,
+                                      _apply_attn, _stack_abstract,
+                                      _maybe_remat)
+from repro.sharding import LogicalArray, constrain
+
+Params = Dict[str, Any]
+
+
+def _xattn_abstract(cfg) -> Params:
+    d, dt = cfg.d_model, cfg.dtype
+    hd = cfg.resolved_head_dim
+    return {
+        "ln": rmsnorm_abstract(d, dt),
+        "wq": LogicalArray((d, cfg.n_heads * hd), dt, ("embed_fsdp", "heads")),
+        "wk": LogicalArray((d, cfg.n_kv_heads * hd), dt, ("embed_fsdp", "kv_heads")),
+        "wv": LogicalArray((d, cfg.n_kv_heads * hd), dt, ("embed_fsdp", "kv_heads")),
+        "wo": LogicalArray((cfg.n_heads * hd, d), dt, ("heads", "embed_fsdp")),
+    }
+
+
+def _enc_layer_abstract(cfg) -> Params:
+    return {"attn": _attn_abstract(cfg),
+            "ffn_ln": rmsnorm_abstract(cfg.d_model, cfg.dtype),
+            "mlp": mlp_abstract(cfg.d_model, cfg.d_ff, cfg.dtype)}
+
+
+def _dec_layer_abstract(cfg) -> Params:
+    return {"self": _attn_abstract(cfg),
+            "cross": _xattn_abstract(cfg),
+            "ffn_ln": rmsnorm_abstract(cfg.d_model, cfg.dtype),
+            "mlp": mlp_abstract(cfg.d_model, cfg.d_ff, cfg.dtype)}
+
+
+def abstract_params(cfg) -> Params:
+    return {
+        "embed": embedding_abstract(cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "enc": _stack_abstract(_enc_layer_abstract(cfg), cfg.n_enc_layers),
+        "dec": _stack_abstract(_dec_layer_abstract(cfg), cfg.n_layers),
+        "enc_norm": rmsnorm_abstract(cfg.d_model, cfg.dtype),
+        "final_norm": rmsnorm_abstract(cfg.d_model, cfg.dtype),
+        "lm_head": LogicalArray((cfg.d_model, cfg.padded_vocab), cfg.dtype,
+                                ("embed", "vocab")),
+    }
+
+
+def abstract_cache(cfg, batch: int, dec_len: int, enc_len: int) -> Params:
+    hd = cfg.resolved_head_dim
+    xshape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, hd)
+    xla = ("layers", "batch", None, "kv_heads", None)
+    return {
+        "self": _stack_abstract(
+            _attn_cache_abstract(cfg, "G", batch, dec_len), cfg.n_layers),
+        "cross_k": LogicalArray(xshape, cfg.dtype, xla),
+        "cross_v": LogicalArray(xshape, cfg.dtype, xla),
+    }
+
+
+def init_params(cfg, key) -> Params:
+    from repro.models.layers import materialize
+    return materialize(abstract_params(cfg), key)
+
+
+def init_cache(cfg, batch: int, dec_len: int, enc_len: int) -> Params:
+    return jax.tree.map(lambda la: jnp.zeros(la.shape, la.dtype),
+                        abstract_cache(cfg, batch, dec_len, enc_len),
+                        is_leaf=lambda x: isinstance(x, LogicalArray))
+
+
+def _cross_kv(cfg, p, memory, rules):
+    b, se, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", memory, p["wk"]).reshape(
+        b, se, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", memory, p["wv"]).reshape(
+        b, se, cfg.n_kv_heads, hd)
+    k = constrain(k, ("batch", "seq_attn", "kv_heads", None), rules)
+    v = constrain(v, ("batch", "seq_attn", "kv_heads", None), rules)
+    return k, v
+
+
+def _apply_cross(cfg, p, x, k, v, rules, enc_len=None):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    residual = x
+    xn = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", xn, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    q = constrain(q, ("batch", "seq_attn", "heads", None), rules)
+    if s == 1:
+        out = attn_mod.decode_attention(
+            q, k, v, enc_len if enc_len is not None else k.shape[1])
+    else:
+        out = attn_mod.attention(q, k, v, causal=False,
+                                 chunk_q=cfg.attn_chunk_q,
+                                 chunk_k=cfg.attn_chunk_k, impl=cfg.attn_impl)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, cfg.n_heads * hd), p["wo"])
+    return residual + constrain(out, ("batch", "seq", "embed"), rules)
+
+
+def encode(cfg, params, frames, *, rules):
+    """frames: (B, S_enc, d) stub frontend embeddings -> memory (B, S_enc, d)."""
+    x = frames.astype(cfg.dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"), rules)
+    pos = jnp.zeros((), jnp.int32)
+
+    def body(x, lp):
+        # bidirectional self-attention: causal=False via direct call
+        b, s, d = x.shape
+        hd = cfg.resolved_head_dim
+        residual = x
+        xn = apply_rmsnorm(lp["attn"]["ln"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", xn, lp["attn"]["wq"]).reshape(
+            b, s, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,dh->bsh", xn, lp["attn"]["wk"]).reshape(
+            b, s, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dh->bsh", xn, lp["attn"]["wv"]).reshape(
+            b, s, cfg.n_kv_heads, hd)
+        q = constrain(q, ("batch", "seq_attn", "heads", None), rules)
+        positions = jnp.arange(s)[None] * jnp.ones((b, 1), jnp.int32)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = attn_mod.attention(q, k, v, causal=False,
+                                 chunk_q=cfg.attn_chunk_q,
+                                 chunk_k=cfg.attn_chunk_k, impl=cfg.attn_impl)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, cfg.n_heads * hd),
+                         lp["attn"]["wo"])
+        x = residual + constrain(out, ("batch", "seq", "embed"), rules)
+        residual = x
+        xn = apply_rmsnorm(lp["ffn_ln"], x, cfg.norm_eps)
+        x = residual + apply_mlp(lp["mlp"], xn, rules)
+        return constrain(x, ("batch", "seq", "embed"), rules), None
+
+    body = _maybe_remat(cfg, body, "train")
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg, params, frames, tokens, *, rules, mode="train", caches=None):
+    """Teacher-forced decoding over encoder memory.
+
+    frames: (B, S_enc, d); tokens: (B, S_dec).
+    Returns (logits, new_caches_or_None, aux=0).
+    """
+    memory = encode(cfg, params, frames, rules=rules)
+    x = apply_embedding(params["embed"], tokens, rules)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = jnp.zeros((), jnp.int32)
+
+    def body(x, xs):
+        if mode == "train":
+            lp, lc = xs, None
+        else:
+            lp, lc = xs
+        x, new_self = _apply_attn(cfg, lp["self"], x, rules=rules, mode=mode,
+                                  cache=None if lc is None else lc, pos=pos,
+                                  kind="G")
+        ck, cv = _cross_kv(cfg, lp["cross"], memory, rules)
+        x = _apply_cross(cfg, lp["cross"], x, ck, cv, rules)
+        residual = x
+        xn = apply_rmsnorm(lp["ffn_ln"], x, cfg.norm_eps)
+        x = residual + apply_mlp(lp["mlp"], xn, rules)
+        x = constrain(x, ("batch", "seq", "embed"), rules)
+        if mode == "train":
+            return x, None
+        return x, {"self": new_self, "ck": ck, "cv": cv}
+
+    body = _maybe_remat(cfg, body, mode)
+    if mode == "train":
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        new_caches = None
+    else:
+        x, ys = jax.lax.scan(body, x, (params["dec"], caches["self"]))
+        new_caches = {"self": ys["self"], "cross_k": ys["ck"],
+                      "cross_v": ys["cv"]}
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = apply_lm_head(params["lm_head"], x, rules)
+    return logits, new_caches, jnp.zeros((), jnp.float32)
+
+
+def decode_step(cfg, params, caches, token, pos, *, rules, enc_len=None):
+    """One decoder token against cached self/cross K,V."""
+    x = apply_embedding(params["embed"], token, rules)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def body(x, xs):
+        lp, lc_self, ck, cv = xs
+        x, new_self = _apply_attn(cfg, lp["self"], x, rules=rules,
+                                  mode="decode", cache=lc_self, pos=pos,
+                                  kind="G")
+        x = _apply_cross(cfg, lp["cross"], x, ck, cv, rules, enc_len=enc_len)
+        residual = x
+        xn = apply_rmsnorm(lp["ffn_ln"], x, cfg.norm_eps)
+        x = residual + apply_mlp(lp["mlp"], xn, rules)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], caches["self"], caches["cross_k"],
+                  caches["cross_v"]))
+    new_caches = {"self": new_self, "cross_k": caches["cross_k"],
+                  "cross_v": caches["cross_v"]}
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = apply_lm_head(params["lm_head"], x, rules)
+    return logits, new_caches

@@ -1,0 +1,124 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+The RG-LRU recurrence (arXiv:2402.19427):
+    r_t = sigmoid(w_a * x_t + b_a)           (recurrence gate, diagonal)
+    i_t = sigmoid(w_i * x_t + b_i)           (input gate, diagonal)
+    a_t = exp(-c * softplus(L) * r_t)        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill evaluates the recurrence with ``lax.associative_scan`` (log-depth
+over the sequence); decode is the O(1) update — hence `long_500k` runs for this
+family.  Note: the published model uses block-diagonal gate projections; we use
+the diagonal special case (recorded in DESIGN.md §4) which preserves the
+recurrence structure and state size.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import LogicalArray, constrain
+
+LRU_C = 8.0
+
+
+def rglru_abstract(cfg, stack: int = 0) -> Dict[str, Any]:
+    d, dt = cfg.d_model, cfg.dtype
+    lru = cfg.lru_width or d
+    lead = (stack,) if stack else ()
+    la = ("layers",) if stack else ()
+    return {
+        "ln": LogicalArray(lead + (d,), dt, la + ("norm",)),
+        "w_x": LogicalArray(lead + (d, lru), dt, la + ("embed_fsdp", "lru")),
+        "w_gate": LogicalArray(lead + (d, lru), dt, la + ("embed_fsdp", "lru")),
+        "conv_w": LogicalArray(lead + (4, lru), dt, la + ("conv", "lru")),
+        "conv_b": LogicalArray(lead + (lru,), dt, la + ("lru",)),
+        "lam": LogicalArray(lead + (lru,), jnp.float32, la + ("lru",)),
+        "w_a": LogicalArray(lead + (lru,), jnp.float32, la + ("lru",)),
+        "b_a": LogicalArray(lead + (lru,), jnp.float32, la + ("lru",)),
+        "w_i": LogicalArray(lead + (lru,), jnp.float32, la + ("lru",)),
+        "b_i": LogicalArray(lead + (lru,), jnp.float32, la + ("lru",)),
+        "w_out": LogicalArray(lead + (lru, d), dt, la + ("lru", "embed_fsdp")),
+    }
+
+
+def rglru_cache_abstract(cfg, batch: int) -> Dict[str, Any]:
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "conv": LogicalArray((batch, 3, lru), cfg.dtype, ("batch", None, "lru")),
+        "h": LogicalArray((batch, lru), jnp.float32, ("batch", "lru")),
+    }
+
+
+def _gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["w_a"] * xf + p["b_a"])
+    i = jax.nn.sigmoid(p["w_i"] * xf + p["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p, x, h0=None):
+    """x: (B,S,lru) -> (y (B,S,lru), h_final (B,lru)) via associative scan."""
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(b.dtype), b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = bv if h0 is None else bv[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_decode(p, x, hprev):
+    """x: (B,1,lru), hprev: (B,lru)."""
+    a, b = _gates(p, x[:, 0])
+    h = a * hprev + b
+    return h.astype(x.dtype)[:, None], h
+
+
+def _causal_conv(x, w, b):
+    wd = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wd - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(wd)) + b
+
+
+def apply_rglru_layer(cfg, p: Dict[str, Any], x: jax.Array, *, rules,
+                      mode: str, cache=None) -> Tuple[jax.Array, Any]:
+    from repro.models.layers import apply_rmsnorm
+    residual = x
+    x = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+    xb = jnp.einsum("bsd,dl->bsl", x, p["w_x"])
+    xb = constrain(xb, ("batch", "seq_attn", "lru"), rules)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", x, p["w_gate"]))
+
+    if mode == "decode":
+        assert cache is not None
+        full = jnp.concatenate([cache["conv"], xb], axis=1)      # (B,4,lru)
+        conv = jnp.einsum("bwl,wl->bl", full, p["conv_w"]) + p["conv_b"]
+        conv = conv[:, None]
+        new_conv = full[:, 1:]
+        y, hf = rglru_decode(p, conv, cache["h"])
+    else:
+        conv = _causal_conv(xb, p["conv_w"], p["conv_b"])
+        h0 = cache["h"] if cache is not None else None
+        y, hf = rglru_scan(p, conv, h0=h0)
+        pad = jnp.pad(xb, ((0, 0), (3, 0), (0, 0)))
+        new_conv = pad[:, pad.shape[1] - 3:]
+
+    out = jnp.einsum("bsl,ld->bsd", y * gate, p["w_out"])
+    out = constrain(out, ("batch", "seq", "embed"), rules)
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv.astype(cfg.dtype), "h": hf}
+    return residual + out, new_cache

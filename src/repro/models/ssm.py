@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked form.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: intra-chunk
+"attention-like" quadratic term + inter-chunk linear recurrence over the
+(H, P, N) state, via ``lax.scan`` over chunks (memory stays O(chunk)).
+The Pallas kernel in ``repro.kernels.ssd_scan`` realizes the same chunking
+in VMEM; this module is the model-level (XLA) path and the test oracle's
+target.  Decode is the O(1) recurrent update — this is why `long_500k`
+*runs* for this family (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import LogicalArray, constrain
+
+SSD_CHUNK = 128
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def ssm_abstract(cfg, stack: int = 0) -> Dict[str, Any]:
+    d_inner, h, n, _ = _dims(cfg)
+    d, dt = cfg.d_model, cfg.dtype
+    conv_ch = d_inner + 2 * n
+    lead = (stack,) if stack else ()
+    la = ("layers",) if stack else ()
+    return {
+        "ln": LogicalArray(lead + (d,), dt, la + ("norm",)),
+        # in_proj -> [z (d_inner), x (d_inner), B (n), C (n), dt (h)]
+        "w_in": LogicalArray(lead + (d, 2 * d_inner + 2 * n + h), dt,
+                             la + ("embed_fsdp", "ssm_heads")),
+        "conv_w": LogicalArray(lead + (cfg.ssm_conv_width, conv_ch), dt,
+                               la + ("conv", None)),
+        "conv_b": LogicalArray(lead + (conv_ch,), dt, la + (None,)),
+        "a_log": LogicalArray(lead + (h,), jnp.float32, la + (None,)),
+        "d_skip": LogicalArray(lead + (h,), jnp.float32, la + (None,)),
+        "dt_bias": LogicalArray(lead + (h,), jnp.float32, la + (None,)),
+        "out_ln": LogicalArray(lead + (d_inner,), dt, la + ("norm",)),
+        "w_out": LogicalArray(lead + (d_inner, d), dt,
+                              la + ("ssm_heads", "embed_fsdp")),
+    }
+
+
+def ssm_cache_abstract(cfg, batch: int) -> Dict[str, Any]:
+    d_inner, h, n, p = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": LogicalArray((batch, cfg.ssm_conv_width - 1, conv_ch),
+                             cfg.dtype, ("batch", None, None)),
+        "state": LogicalArray((batch, h, p, n), jnp.float32,
+                              ("batch", "ssm_heads", None, None)),
+    }
+
+
+def _split_in(cfg, proj):
+    d_inner, h, n, _ = _dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C), w: (W,C) depthwise causal, returns (B,S,C)."""
+    wd = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wd - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(wd))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip, h0=None, chunk: int = SSD_CHUNK):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) dt: (B,S,H) post-softplus, a: (H,) negative,
+    b,c: (B,S,N) shared across heads (ngroups=1), h0: (B,H,P,N) or None.
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def chunk_step(hprev, inp):
+        xk, dtk, bk, ck = inp                       # (B,Q,H,P) (B,Q,H) (B,Q,N)
+        da = dtk * a                                # (B,Q,H)
+        da_cs = jnp.cumsum(da, axis=1)              # inclusive cumsum
+        # intra-chunk quadratic term: L[i,j] = exp(da_cs_i - da_cs_j) (j<=i)
+        seg = da_cs[:, :, None, :] - da_cs[:, None, :, :]       # (B,Q,Q,H)
+        q = xk.shape[1]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        l_mat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)                  # (B,Q,Q)
+        att = cb[..., None] * l_mat * dtk[:, None, :, :]         # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att.astype(xk.dtype), xk)
+        # contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", ck,
+                             hprev.astype(ck.dtype)) * jnp.exp(
+            da_cs)[..., None].astype(xk.dtype)
+        # new chunk state: sum_j exp(da_cs_last - da_cs_j) dt_j B_j (x) x_j
+        decay_to_end = jnp.exp(da_cs[:, -1:, :] - da_cs)         # (B,Q,H)
+        contrib = jnp.einsum(
+            "bjn,bjhp->bhpn", bk,
+            (xk * (dtk * decay_to_end)[..., None].astype(xk.dtype)))
+        hnew = hprev * jnp.exp(da_cs[:, -1])[..., None, None] \
+            + contrib.astype(jnp.float32)
+        return hnew, (y_intra + y_inter).astype(xk.dtype)
+
+    hf, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    y = y + x * d_skip[None, None, :, None].astype(x.dtype)
+    return y, hf
+
+
+def ssd_decode(x, dt, a, b, c, d_skip, hprev):
+    """One-token recurrent update. x: (B,1,H,P) dt: (B,1,H) b,c: (B,1,N)."""
+    da = jnp.exp(dt[:, 0] * a)                                   # (B,H)
+    upd = jnp.einsum("bn,bhp->bhpn", b[:, 0],
+                     x[:, 0] * dt[:, 0, :, None].astype(x.dtype))
+    hnew = hprev * da[..., None, None] + upd.astype(jnp.float32)
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0], hnew.astype(c.dtype))
+    y = y + x[:, 0] * d_skip[None, :, None].astype(x.dtype)
+    return y[:, None], hnew
+
+
+def apply_ssm_layer(cfg, p: Dict[str, Any], x: jax.Array, *, rules,
+                    mode: str, cache=None) -> Tuple[jax.Array, Any]:
+    """Full Mamba-2 block: norm -> in_proj -> conv -> SSD -> gated out."""
+    from repro.models.layers import apply_rmsnorm
+    d_inner, h, n, phd = _dims(cfg)
+    residual = x
+    x = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    proj = constrain(proj, ("batch", "seq_attn", "ssm_heads"), rules)
+    z, xs, b, c, dt = _split_in(cfg, proj)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+
+    if mode == "decode":
+        assert cache is not None
+        prev = cache["conv"]                                    # (B,W-1,C)
+        full = jnp.concatenate([prev, conv_in], axis=1)         # (B,W,C)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", full, p["conv_w"]) + p["conv_b"])[:, None]
+        new_conv = full[:, 1:]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        w = cfg.ssm_conv_width - 1
+        pad = jnp.pad(conv_in, ((0, 0), (w, 0), (0, 0)))
+        new_conv = pad[:, pad.shape[1] - w:]
+
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    bsz, s = xs.shape[0], xs.shape[1]
+    xh = xs.reshape(bsz, s, h, phd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if mode == "decode":
+        y, hf = ssd_decode(xh, dt, a, b, c, p["d_skip"], cache["state"])
+    else:
+        h0 = cache["state"] if cache is not None else None
+        y, hf = ssd_chunked(xh, dt, a, b, c, p["d_skip"], h0=h0)
+
+    y = y.reshape(bsz, s, d_inner)
+    y = apply_rmsnorm(p["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    out = constrain(out, ("batch", "seq", "embed"), rules)
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv.astype(cfg.dtype), "state": hf}
+    return residual + out, new_cache

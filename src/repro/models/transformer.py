@@ -1,0 +1,430 @@
+"""Generic pattern-stacked language model.
+
+One machine covers all decoder-only assigned archs:
+  dense (llama/qwen/internvl-backbone), windowed patterns (gemma3 "LLLLLG"),
+  MoE (qwen3-moe / olmoe), SSM (mamba2, pattern "M"), hybrid (recurrentgemma
+  "RRA"->"R","R","L").
+
+Layers are grouped by the repeating pattern unit and scanned with stacked
+parameters (compact HLO -> fast 512-device SPMD compiles); remainder layers
+("tail") are applied unrolled.  Every layer = temporal-mixing(kind) +
+optional FFN (dense MLP or MoE).
+
+Modes: "train" (no cache), "prefill" (writes cache), "decode" (one token).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_embedding, apply_lm_head, apply_mlp,
+                                 apply_rmsnorm, apply_rope, embedding_abstract,
+                                 mlp_abstract, rmsnorm_abstract)
+from repro.sharding import LogicalArray, constrain
+
+Params = Dict[str, Any]
+
+ATTN_KINDS = ("G", "L")
+
+
+def default_unit(cfg) -> Tuple[str, ...]:
+    if cfg.layer_pattern:
+        return cfg.layer_pattern
+    if cfg.family == "ssm":
+        return ("M",)
+    return ("G",)
+
+
+def split_layers(cfg) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    unit = default_unit(cfg)
+    n_groups = cfg.n_layers // len(unit)
+    tail = tuple(unit[i % len(unit)]
+                 for i in range(n_groups * len(unit), cfg.n_layers))
+    return unit, n_groups, tail
+
+
+def _stack_abstract(tree, n: int):
+    return jax.tree.map(
+        lambda la: LogicalArray((n,) + la.shape, la.dtype, ("layers",) + la.logical),
+        tree, is_leaf=lambda x: isinstance(x, LogicalArray))
+
+
+# ---------------------------------------------------------------------------
+# attention layer
+# ---------------------------------------------------------------------------
+
+def _attn_abstract(cfg) -> Params:
+    d, dt = cfg.d_model, cfg.dtype
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln": rmsnorm_abstract(d, dt),
+        "wq": LogicalArray((d, cfg.n_heads * hd), dt, ("embed_fsdp", "heads")),
+        "wk": LogicalArray((d, cfg.n_kv_heads * hd), dt,
+                           ("embed_fsdp", "kv_heads_w")),
+        "wv": LogicalArray((d, cfg.n_kv_heads * hd), dt,
+                           ("embed_fsdp", "kv_heads_w")),
+        "wo": LogicalArray((cfg.n_heads * hd, d), dt, ("heads", "embed_fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_abstract(hd, dt)
+        p["k_norm"] = rmsnorm_abstract(hd, dt)
+    return p
+
+
+def _cache_heads(cfg) -> int:
+    return cfg.decode_cache_heads or cfg.n_kv_heads
+
+
+def _attn_cache_abstract(cfg, kind, batch, cache_len) -> Params:
+    hd = cfg.resolved_head_dim
+    c = cache_len
+    if kind == "L" and cfg.local_window:
+        c = min(cfg.local_window, cache_len)
+    shp = (batch, c, _cache_heads(cfg), hd)
+    la = ("batch", None, "kv_heads", None)
+    return {"k": LogicalArray(shp, cfg.dtype, la),
+            "v": LogicalArray(shp, cfg.dtype, la)}
+
+
+def _decode_kv_spec(cfg):
+    """Sharding for the repeated decode KV: heads when they divide the TP
+    degree, else head_dim (never forces a cross-layout reshard of the cache)."""
+    from repro.sharding import get_abstract_mesh_or_none
+    mesh = get_abstract_mesh_or_none()
+    tp = 1
+    if mesh is not None and not mesh.empty and "model" in mesh.axis_names:
+        tp = mesh.shape["model"]
+    ch = _cache_heads(cfg)
+    if tp <= 1 or (ch % tp == 0 and cfg.n_heads % tp == 0):
+        return ("batch", None, "heads", None)
+    if cfg.resolved_head_dim % tp == 0:
+        return ("batch", None, None, "heads")   # model axis on head_dim
+    return ("batch", None, None, None)
+
+
+def _write_prefill_cache(cache_kv, full, window: int):
+    """Write prefill keys/values (B,S,..) into a cache buffer (B,C,..)."""
+    s = full.shape[1]
+    c = cache_kv.shape[1]
+    if window and c == window and s >= window:
+        ring = jnp.roll(full[:, s - window:], (s - window) % window, axis=1)
+        return ring.astype(cache_kv.dtype)
+    return jax.lax.dynamic_update_slice(
+        cache_kv, full[:, :c].astype(cache_kv.dtype), (0, 0, 0, 0))
+
+
+def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    window = cfg.local_window if kind == "L" else 0
+    theta = cfg.rope_theta
+    if kind == "L" and cfg.rope_theta_local is not None:
+        theta = cfg.rope_theta_local
+
+    residual = x
+    xn = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+    ch = _cache_heads(cfg)
+    wk, wv = p["wk"], p["wv"]
+    if ch != cfg.n_kv_heads:
+        # kv WEIGHT folding (decode_cache_heads=R): tile wk/wv from kv heads
+        # to R so k/v come out natively R-head-sharded — no activation-side
+        # repeat across shard boundaries, no extra per-device FLOPs, at the
+        # cost of an R/kv x larger KV cache.  §Perf HC1/HC3.
+        rep = ch // cfg.n_kv_heads
+        wk = jnp.repeat(wk.reshape(d, cfg.n_kv_heads, hd), rep, axis=1
+                        ).reshape(d, ch * hd)
+        wv = jnp.repeat(wv.reshape(d, cfg.n_kv_heads, hd), rep, axis=1
+                        ).reshape(d, ch * hd)
+    q = jnp.einsum("bsd,dh->bsh", xn, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", xn, wk).reshape(b, s, ch, hd)
+    v = jnp.einsum("bsd,dh->bsh", xn, wv).reshape(b, s, ch, hd)
+    q = constrain(q, ("batch", "seq_attn", "heads", None), rules)
+    if ch != cfg.n_kv_heads:
+        k = constrain(k, ("batch", "seq_attn", "kv_heads", None), rules)
+        v = constrain(v, ("batch", "seq_attn", "kv_heads", None), rules)
+    elif rules.get("kv_heads_w", "model") is None:
+        # kv projections replicated (kv_heads % tp != 0): pin k/v replicated
+        # so the cache write can't back-propagate a conflicting sharding
+        k = constrain(k, ("batch", "seq_attn", None, None), rules)
+        v = constrain(v, ("batch", "seq_attn", None, None), rules)
+    if cfg.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = apply_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    new_cache = None
+    out_spec = ("batch", "seq_attn", "heads", None)
+    if mode == "decode":
+        assert cache is not None
+        q = apply_rope(q, pos[None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32),
+                       theta)
+        k = apply_rope(k, pos[None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32),
+                       theta)
+        ch = _cache_heads(cfg)
+        k = attn_mod.repeat_kv(k, ch)
+        v = attn_mod.repeat_kv(v, ch)
+        c = cache["k"].shape[1]
+        slot = (pos % c).astype(jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        ring = bool(window) and c == window
+        # sharding for the (huge) cache: heads when they divide TP cleanly,
+        # else head_dim.  The head_dim path uses grouped-GQA math (no repeat
+        # buffer, no resharding of the cache; costs one scores psum per
+        # layer — see EXPERIMENTS.md §Perf decode hillclimb).
+        spec = _decode_kv_spec(cfg)
+        if spec[-1] is None and spec[2] == "heads":
+            k_full = constrain(attn_mod.repeat_kv(k_cache, cfg.n_heads),
+                               spec, rules)
+            v_full = constrain(attn_mod.repeat_kv(v_cache, cfg.n_heads),
+                               spec, rules)
+            out = attn_mod.decode_attention(
+                q, k_full, v_full, pos + 1, window=window, ring=ring)
+        else:
+            q = constrain(q, ("batch", None, None, "heads"), rules)
+            k_c = constrain(k_cache, spec, rules)
+            v_c = constrain(v_cache, spec, rules)
+            out = attn_mod.decode_attention_gqa(
+                q, k_c, v_c, pos + 1, window=window, ring=ring)
+            # keep the output head_dim-sharded: pulling it to heads-sharded
+            # here would force GSPMD to reshard the cache for the p@v dot
+            # (involuntary full-replication fallback)
+            out_spec = ("batch", "seq_attn", None, "heads")
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        positions = jnp.arange(s)[None] * jnp.ones((b, 1), jnp.int32)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+        if mode == "prefill":
+            assert cache is not None
+            ch = _cache_heads(cfg)
+            new_cache = {
+                "k": _write_prefill_cache(cache["k"],
+                                          attn_mod.repeat_kv(k, ch), window),
+                "v": _write_prefill_cache(cache["v"],
+                                          attn_mod.repeat_kv(v, ch), window)}
+        # repeat kv -> full heads with one consistent 'heads' sharding
+        # (avoids grouped-reshape sharding conflicts; see attention.py)
+        k = constrain(attn_mod.repeat_kv(k, cfg.n_heads),
+                      ("batch", "seq_attn", "heads", None), rules)
+        v = constrain(attn_mod.repeat_kv(v, cfg.n_heads),
+                      ("batch", "seq_attn", "heads", None), rules)
+        out = attn_mod.attention(
+            q, k, v, causal=True, window=window,
+            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+            impl=cfg.attn_impl)
+
+    out = constrain(out, out_spec, rules)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, cfg.n_heads * hd), p["wo"])
+    out = constrain(out, ("batch", "seq", "embed"), rules)
+    return residual + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full layer = mixing + optional FFN
+# ---------------------------------------------------------------------------
+
+def layer_abstract(cfg, kind: str) -> Params:
+    if kind in ATTN_KINDS:
+        p = {"mix": _attn_abstract(cfg)}
+    elif kind == "M":
+        p = {"mix": ssm_mod.ssm_abstract(cfg)}
+    elif kind == "R":
+        p = {"mix": hybrid_mod.rglru_abstract(cfg)}
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        if cfg.family == "moe":
+            p["ffn_ln"] = rmsnorm_abstract(cfg.d_model, cfg.dtype)
+            p["moe"] = moe_mod.moe_abstract(cfg)
+        else:
+            p["ffn_ln"] = rmsnorm_abstract(cfg.d_model, cfg.dtype)
+            p["mlp"] = mlp_abstract(cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def layer_cache_abstract(cfg, kind: str, batch: int, cache_len: int):
+    if kind in ATTN_KINDS:
+        return _attn_cache_abstract(cfg, kind, batch, cache_len)
+    if kind == "M":
+        return ssm_mod.ssm_cache_abstract(cfg, batch)
+    if kind == "R":
+        return hybrid_mod.rglru_cache_abstract(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_layer(cfg, kind: str, p: Params, x, *, rules, mode, cache, pos):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        x, new_cache = _apply_attn(cfg, p["mix"], x, rules=rules, mode=mode,
+                                   cache=cache, pos=pos, kind=kind)
+    elif kind == "M":
+        x, new_cache = ssm_mod.apply_ssm_layer(cfg, p["mix"], x, rules=rules,
+                                               mode=mode, cache=cache)
+    elif kind == "R":
+        x, new_cache = hybrid_mod.apply_rglru_layer(cfg, p["mix"], x,
+                                                    rules=rules, mode=mode,
+                                                    cache=cache)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        residual = x
+        xn = apply_rmsnorm(p["ffn_ln"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            out, aux = moe_mod.apply_moe(cfg, p["moe"], xn, rules)
+        else:
+            out = apply_mlp(p["mlp"], xn, rules)
+        x = residual + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whole-model params / cache
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg) -> Params:
+    unit, n_groups, tail = split_layers(cfg)
+    group = {f"slot{i}": layer_abstract(cfg, k) for i, k in enumerate(unit)}
+    params: Params = {
+        "embed": embedding_abstract(cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "groups": _stack_abstract(group, n_groups),
+        "tail": {f"tail{i}": layer_abstract(cfg, k) for i, k in enumerate(tail)},
+        "final_norm": rmsnorm_abstract(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = LogicalArray(
+            (cfg.d_model, cfg.padded_vocab), cfg.dtype, ("embed", "vocab"))
+    return params
+
+
+def abstract_cache(cfg, batch: int, cache_len: int) -> Params:
+    unit, n_groups, tail = split_layers(cfg)
+    group = {f"slot{i}": layer_cache_abstract(cfg, k, batch, cache_len)
+             for i, k in enumerate(unit)}
+    return {
+        "groups": _stack_abstract(group, n_groups),
+        "tail": {f"tail{i}": layer_cache_abstract(cfg, k, batch, cache_len)
+                 for i, k in enumerate(tail)},
+    }
+
+
+def init_params(cfg, key) -> Params:
+    from repro.models.layers import materialize
+    return materialize(abstract_params(cfg), key)
+
+
+def init_cache(cfg, batch: int, cache_len: int) -> Params:
+    return jax.tree.map(
+        lambda la: jnp.zeros(la.shape, la.dtype), abstract_cache(cfg, batch, cache_len),
+        is_leaf=lambda x: isinstance(x, LogicalArray))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg, fn, mode):
+    if mode != "train" or cfg.remat_policy == "full":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _run_stack(cfg, params, x, *, rules, mode, caches, pos):
+    unit, n_groups, tail = split_layers(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, xs):
+        x, aux = carry
+        if mode == "train":
+            gp, gc = xs, None
+        else:
+            gp, gc = xs
+        new_gc = {}
+        for i, kind in enumerate(unit):
+            slot = f"slot{i}"
+            x, nc, a = apply_layer(
+                cfg, kind, gp[slot], x, rules=rules, mode=mode,
+                cache=None if gc is None else gc[slot], pos=pos)
+            new_gc[slot] = nc
+            aux = aux + a
+        x = constrain(x, ("batch", "seq", "embed"), rules)
+        if mode == "train":
+            return (x, aux), None
+        return (x, aux), new_gc
+
+    body = _maybe_remat(cfg, group_body, mode)
+    if n_groups > 0:
+        xs = params["groups"] if mode == "train" else (params["groups"],
+                                                       caches["groups"])
+        (x, aux), new_group_caches = jax.lax.scan(body, (x, aux0), xs)
+    else:
+        new_group_caches, aux = None, aux0
+
+    new_tail = {}
+    for i, kind in enumerate(tail):
+        name = f"tail{i}"
+        x, nc, a = apply_layer(
+            cfg, kind, params["tail"][name], x, rules=rules, mode=mode,
+            cache=None if caches is None else caches["tail"][name], pos=pos)
+        new_tail[name] = nc
+        aux = aux + a
+
+    new_caches = None
+    if mode != "train":
+        new_caches = {"groups": new_group_caches, "tail": new_tail}
+    return x, new_caches, aux
+
+
+def embed_inputs(cfg, params, tokens, prefix_embeds, rules):
+    x = apply_embedding(params["embed"], tokens, rules)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, ("batch", "seq", "embed"), rules)
+
+
+def logits_from_hidden(cfg, params, x, rules):
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return apply_lm_head(params["embed"], x, rules, transpose=True)
+    return apply_lm_head(params["lm_head"], x, rules)
+
+
+def forward(cfg, params, tokens, *, rules, prefix_embeds=None, mode="train",
+            caches=None):
+    """tokens: (B, S_tok); prefix_embeds: (B, P, d) stub frontend embeddings.
+
+    Returns (logits (B, S, V_padded), new_caches_or_None, aux_loss).
+    """
+    x = embed_inputs(cfg, params, tokens, prefix_embeds, rules)
+    pos = jnp.zeros((), jnp.int32)
+    x, new_caches, aux = _run_stack(cfg, params, x, rules=rules, mode=mode,
+                                    caches=caches, pos=pos)
+    logits = logits_from_hidden(cfg, params, x, rules)
+    return logits, new_caches, aux
+
+
+def decode_step(cfg, params, caches, token, pos, *, rules):
+    """token: (B, 1) int32; pos: () int32 absolute position.
+
+    Returns (logits (B, 1, V_padded), new_caches).
+    """
+    x = apply_embedding(params["embed"], token, rules)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x, new_caches, _ = _run_stack(cfg, params, x, rules=rules, mode="decode",
+                                  caches=caches, pos=pos)
+    logits = logits_from_hidden(cfg, params, x, rules)
+    return logits, new_caches

@@ -1,0 +1,95 @@
+"""AdamW with decoupled weight decay, global-norm clipping and cosine LR.
+
+Functional, pytree-native.  Moments are fp32 regardless of param dtype
+(bf16 training keeps fp32 m/v — the usual mixed-precision recipe); the
+moments inherit each parameter's logical sharding so the optimizer state
+partitions identically to the parameters (critical for the 26B configs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import LogicalArray
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_abstract_state(abstract_params) -> Dict[str, Any]:
+    """LogicalArray params tree -> abstract optimizer state (for dry-run)."""
+    def moment(la):
+        return LogicalArray(la.shape, jnp.float32, la.logical)
+    is_leaf = lambda x: isinstance(x, LogicalArray)
+    return {
+        "m": jax.tree.map(moment, abstract_params, is_leaf=is_leaf),
+        "v": jax.tree.map(moment, abstract_params, is_leaf=is_leaf),
+        "step": LogicalArray((), jnp.int32, ()),
+    }
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m2 / b1t
+        vh = v2 / b2t
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) * (1 - lr * decay) - lr * step_
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,6 @@
+from repro.runtime.fault import (FaultInjector, StragglerMonitor,
+                                 run_with_restarts)
+from repro.runtime.elastic import ElasticPlan, reshard_tree
+
+__all__ = ["FaultInjector", "StragglerMonitor", "run_with_restarts",
+           "ElasticPlan", "reshard_tree"]

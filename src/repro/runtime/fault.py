@@ -1,0 +1,102 @@
+"""Fault tolerance: restart-on-failure, straggler detection.
+
+At 1000+ nodes, node loss and stragglers are routine.  The contract here:
+
+  * every step is deterministic given (checkpoint step, data seed) —
+    repro.data replays the exact stream after restore;
+  * checkpoints are atomic (repro.checkpoint) and restored via the C3 tree
+    loader so restore cost is ~independent of replica count;
+  * step-time telemetry flows through hostcall CALL_STEP_REPORT (C5) into a
+    StragglerMonitor; sustained stragglers trigger the runtime policy
+    (re-mesh without the slow pod -> repro.runtime.elastic).
+
+``run_with_restarts`` is the generic supervisor used by launch/train.py; a
+FaultInjector stands in for real device loss in tests/examples.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FaultInjector:
+    """Raise SimulatedFailure at the given global steps (once each)."""
+    fail_at_steps: List[int] = field(default_factory=list)
+    fired: List[int] = field(default_factory=list)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.append(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class StragglerMonitor:
+    """Rolling per-step wall-time stats; flags outliers.
+
+    threshold: a step is a straggler observation if it exceeds
+    ``threshold x`` the rolling median; ``patience`` consecutive observations
+    escalate to action (e.g. exclude the pod and re-mesh)."""
+    window: int = 32
+    threshold: float = 1.5
+    patience: int = 3
+    times: List[float] = field(default_factory=list)
+    flags: int = 0
+    escalations: int = 0
+
+    def observe(self, wall_s: float) -> bool:
+        self.times.append(wall_s)
+        hist = self.times[-self.window:]
+        if len(hist) < 5:
+            return False
+        med = sorted(hist)[len(hist) // 2]
+        if wall_s > self.threshold * med:
+            self.flags += 1
+            if self.flags >= self.patience:
+                self.escalations += 1
+                self.flags = 0
+                return True
+        else:
+            self.flags = 0
+        return False
+
+    def summary(self) -> Dict[str, float]:
+        if not self.times:
+            return {"median_s": 0.0, "p99_s": 0.0, "escalations": 0}
+        s = sorted(self.times)
+        return {"median_s": s[len(s) // 2],
+                "p99_s": s[min(len(s) - 1, int(0.99 * len(s)))],
+                "escalations": self.escalations}
+
+
+def run_with_restarts(run_fn: Callable[[int], int], *,
+                      resume_step_fn: Callable[[], int],
+                      max_restarts: int = 3,
+                      on_restart: Optional[Callable[[int, Exception], None]]
+                      = None) -> Dict[str, object]:
+    """Supervise ``run_fn(start_step) -> final_step`` with restart-on-failure.
+
+    ``resume_step_fn`` re-reads the latest durable checkpoint step, so every
+    restart resumes from persisted state, not in-memory state."""
+    restarts = 0
+    t0 = time.perf_counter()
+    while True:
+        start = resume_step_fn()
+        try:
+            final = run_fn(start)
+            return {"final_step": final, "restarts": restarts,
+                    "wall_s": time.perf_counter() - t0}
+        except SimulatedFailure as e:  # real impl: jax device errors too
+            restarts += 1
+            if on_restart:
+                on_restart(restarts, e)
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded max_restarts={max_restarts}") from e

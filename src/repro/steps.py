@@ -1,0 +1,186 @@
+"""Top-level step functions: train_step / prefill_step / serve_step.
+
+These are the programs the persistent executor (repro.core.syscore) hot-loads:
+pure functions of (params/opt_state/caches, batch) with donated buffers, one
+per (arch x shape) cell.  ``make_*`` returns a closure suitable for
+``jax.jit`` with explicit in/out shardings supplied by the launcher.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.layers import softmax_xent
+from repro.optim import AdamWConfig, adamw_update
+from repro.sharding import constrain
+
+
+def model_module(cfg):
+    return encdec if cfg.is_encdec else transformer
+
+
+def _lm_loss(cfg, logits, labels, aux, rules):
+    """labels < 0 are masked (e.g. frontend prefix positions)."""
+    losses = softmax_xent(logits, jnp.maximum(labels, 0), cfg.vocab_size)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_coef * aux / max(cfg.n_layers, 1)
+    return loss
+
+
+def make_train_step(cfg, rules, opt_cfg: AdamWConfig, accum: int = 1,
+                    grad_constraint: bool = False,
+                    grad_of_scan: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...};
+    batch (decoder-only) = {"tokens": (B,S_tok), "labels": (B,S)[, "prefix_embeds"]}
+    batch (enc-dec)      = {"frames": (B,Se,d), "tokens": (B,Sd), "labels": (B,Sd)}
+
+    ``accum`` > 1 runs gradient accumulation over microbatches via lax.scan:
+    activation temps scale with the microbatch while the gradient buffer is
+    carried (fp32, param-sharded).  This is how the big train cells stay under
+    per-chip HBM (EXPERIMENTS.md §Dry-run).
+
+    ``grad_constraint`` pins every microbatch gradient to its parameter's
+    sharding, turning GSPMD's full-size gradient all-reduce into a
+    reduce-scatter (ZeRO-style; ~2x less gradient wire — §Perf HC2).
+
+    ``grad_of_scan`` differentiates THROUGH the microbatch scan instead of
+    scanning value_and_grad: the parameter cotangent accumulates inside the
+    loop and the cross-device gradient reduction happens ONCE per step
+    instead of once per microbatch (accum x less gradient wire).  Gradients
+    still accumulate in f32: parameters are upcast at the step boundary so
+    the cotangent dtype is f32, and compute casts back to the model dtype.
+    """
+    from repro.sharding import LogicalArray, constrain as _constrain
+    mod = encdec if cfg.is_encdec else transformer
+    abs_params = mod.abstract_params(cfg) if grad_constraint else None
+
+    def constrain_grads(g):
+        if abs_params is None:
+            return g
+        return jax.tree.map(
+            lambda la, gi: _constrain(gi, la.logical, rules),
+            abs_params, g,
+            is_leaf=lambda x: isinstance(x, LogicalArray))
+    def loss_fn(params, batch):
+        if cfg.is_encdec:
+            logits, _, aux = encdec.forward(
+                cfg, params, batch["frames"], batch["tokens"], rules=rules,
+                mode="train")
+        else:
+            logits, _, aux = transformer.forward(
+                cfg, params, batch["tokens"], rules=rules,
+                prefix_embeds=batch.get("prefix_embeds"), mode="train")
+        return _lm_loss(cfg, logits, batch["labels"], aux, rules)
+
+    def grads_of(params, batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, constrain_grads(g)
+
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    def _upcast(p):
+        return p.astype(jnp.float32) if jnp.issubdtype(
+            p.dtype, jnp.floating) else p
+
+    def _downcast_like(p32, p):
+        return p32.astype(p.dtype)
+
+    def grads_grad_of_scan(params, batch):
+        micro = jax.tree.map(split, batch)
+        params32 = jax.tree.map(_upcast, params)
+
+        def total_loss(params32):
+            def body(acc, mb):
+                p = jax.tree.map(_downcast_like, params32, params)
+                return acc + loss_fn(p, mb), None
+
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+            total, _ = jax.lax.scan(body, 0.0, micro)
+            return total / accum
+
+        loss, g32 = jax.value_and_grad(total_loss)(params32)
+        return loss, constrain_grads(g32)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum <= 1:
+            loss, grads = grads_of(params, batch)
+        elif grad_of_scan:
+            loss, grads = grads_grad_of_scan(params, batch)
+        else:
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def acc_step(carry, mb):
+                g, l = carry
+                li, gi = grads_of(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g, gi)
+                return (g, l + li), None
+
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt"], state["params"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, rules):
+    """prefill_step(params, caches, batch) -> (caches, last_logits)."""
+    def prefill_step(params, caches, batch):
+        if cfg.is_encdec:
+            logits, new_caches, _ = encdec.forward(
+                cfg, params, batch["frames"], batch["tokens"], rules=rules,
+                mode="prefill", caches=caches)
+        else:
+            logits, new_caches, _ = transformer.forward(
+                cfg, params, batch["tokens"], rules=rules,
+                prefix_embeds=batch.get("prefix_embeds"), mode="prefill",
+                caches=caches)
+        return new_caches, logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg, rules):
+    """serve_step(params, caches, token, pos) -> (caches, next_token, logits).
+
+    One decode step: greedy next token against the KV cache / recurrent state.
+    """
+    def serve_step(params, caches, token, pos):
+        if cfg.is_encdec:
+            logits, new_caches = encdec.decode_step(
+                cfg, params, caches, token, pos, rules=rules)
+        else:
+            logits, new_caches = transformer.decode_step(
+                cfg, params, caches, token, pos, rules=rules)
+        # mask vocab padding before argmax
+        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+        masked = jnp.where(valid, logits, -jnp.inf)
+        next_token = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        return new_caches, next_token, logits
+
+    return serve_step
+
+
+def init_train_state(cfg, key, opt_cfg: Optional[AdamWConfig] = None):
+    from repro.optim import adamw_init
+    mod = model_module(cfg)
+    params = mod.init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}

@@ -1,0 +1,14 @@
+import os
+
+# Smoke tests and benchmarks must see the real single CPU device.
+# ONLY launch/dryrun.py forces 512 placeholder devices (and only in its own
+# process).  Guard against accidental inheritance:
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,261 @@
+"""Tests for the paper's five contributions (repro.core).
+
+The Table-1/Table-2 *behaviours* are asserted here (hot-load beats cold
+compile; re-execute beats hot-load; placement classes partition correctly;
+DC table obeys capacity/LRU/pinning/reset invariants; hostcalls round-trip);
+the *numbers* live in benchmarks/.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DynamicCallTable, HostCallTable, PlacementPlan,
+                        Syscore, UVARegistry, apply_plan, cold_execute,
+                        USRCORE, USRMEM, DYNAMIC)
+from repro.sharding import LogicalArray
+
+
+# ---------------------------------------------------------------------------
+# C2: syscore persistent executor
+# ---------------------------------------------------------------------------
+def _toy_step(w, x):
+    return jnp.tanh(x @ w) @ w.T
+
+
+def _toy_args():
+    w = jnp.ones((64, 64), jnp.float32) * 0.01
+    x = jnp.ones((8, 64), jnp.float32)
+    return w, x
+
+
+def test_syscore_hot_load_and_reexecute():
+    sc = Syscore()
+    w, x = _toy_args()
+    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
+                LogicalArray(x.shape, x.dtype, (None, None)))
+    sc.hot_load("toy", _toy_step, abstract)
+    out1 = sc.execute_blocking("toy", w, x)
+    out2 = sc.execute_blocking("toy", w, x)
+    np.testing.assert_allclose(out1, out2)
+    rep = sc.report()["programs"]["toy"]
+    assert rep["executions"] == 2
+    assert rep["compile_s"] > 0
+
+
+def test_syscore_reexecute_beats_cold_compile():
+    sc = Syscore()
+    w, x = _toy_args()
+    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
+                LogicalArray(x.shape, x.dtype, (None, None)))
+    sc.hot_load("toy", _toy_step, abstract)
+    sc.execute_blocking("toy", w, x)  # warm the dispatch path
+    t0 = time.perf_counter()
+    sc.execute_blocking("toy", w, x)
+    reexec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(cold_execute(_toy_step, w, x))
+    cold = time.perf_counter() - t0
+    # the paper's 73 ms -> 40 us contrast; on CPU we just require >5x
+    assert cold > 5 * reexec, (cold, reexec)
+
+
+def test_syscore_serialize_roundtrip():
+    sc = Syscore()
+    w, x = _toy_args()
+    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
+                LogicalArray(x.shape, x.dtype, (None, None)))
+    sc.hot_load("toy", _toy_step, abstract)
+    want = np.asarray(sc.execute_blocking("toy", w, x))
+    try:
+        payload, in_tree, out_tree = sc.serialize("toy")
+    except Exception as e:
+        pytest.skip(f"executable serialization unavailable: {e}")
+    sc2 = Syscore()
+    sc2.install_serialized("toy2", payload, in_tree, out_tree)
+    got = np.asarray(jax.block_until_ready(sc2.execute("toy2", w, x)))
+    np.testing.assert_allclose(got, want)
+    assert sc2.report()["programs"]["toy2"]["load_s"] > 0
+
+
+def test_syscore_hot_swap_does_not_disturb_other_programs():
+    sc = Syscore()
+    w, x = _toy_args()
+    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
+                LogicalArray(x.shape, x.dtype, (None, None)))
+    sc.hot_load("a", _toy_step, abstract)
+    out_a = np.asarray(sc.execute_blocking("a", w, x))
+    sc.hot_load("b", lambda w, x: x * 2.0, abstract)   # hot swap in another
+    np.testing.assert_allclose(
+        np.asarray(sc.execute_blocking("a", w, x)), out_a)
+    np.testing.assert_allclose(
+        np.asarray(sc.execute_blocking("b", w, x)), np.asarray(x) * 2)
+
+
+# ---------------------------------------------------------------------------
+# C4: dynamic call table
+# ---------------------------------------------------------------------------
+def _page_loader(n, size):
+    def load():
+        return np.full((size,), n, np.uint8)
+    return load
+
+
+def test_dc_first_call_loads_then_hits():
+    t = DynamicCallTable(capacity_bytes=1024)
+    t.register("f", _page_loader(1, 100), 100)
+    v1 = t.call("f")
+    e = t._entries["f"]
+    assert e.loads == 1 and e.hits == 0
+    v2 = t.call("f")
+    assert e.loads == 1 and e.hits == 1
+    assert v1 is v2                       # patched-branch fast path
+
+
+def test_dc_lru_eviction_order():
+    t = DynamicCallTable(capacity_bytes=250)
+    for n, name in enumerate(["a", "b", "c"]):
+        t.register(name, _page_loader(n, 100), 100)
+    t.call("a")
+    t.call("b")
+    t.call("a")         # refresh a; b is now LRU
+    t.call("c")         # must evict b
+    assert set(t.resident()) == {"a", "c"}
+    assert t.evictions == 1
+
+
+def test_dc_reset_and_pinning():
+    t = DynamicCallTable(capacity_bytes=300)
+    t.register("pinned", _page_loader(0, 100), 100, pinned=True)
+    t.register("x", _page_loader(1, 100), 100)
+    t.call("pinned")
+    t.call("x")
+    t.reset()
+    assert t.resident() == ["pinned"]
+    with pytest.raises(MemoryError):
+        tt = DynamicCallTable(capacity_bytes=100)
+        tt.register("p1", _page_loader(0, 100), 100, pinned=True)
+        tt.register("p2", _page_loader(1, 100), 100, pinned=True)
+        tt.call("p1")
+        tt.call("p2")   # arena full of pinned pages
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(1, 120), min_size=1, max_size=12),
+       calls=st.lists(st.integers(0, 11), min_size=1, max_size=60),
+       cap=st.integers(120, 400))
+def test_dc_capacity_invariant(sizes, calls, cap):
+    """Property: resident bytes never exceed capacity; every call returns the
+    correct page content."""
+    t = DynamicCallTable(capacity_bytes=cap)
+    for i, s in enumerate(sizes):
+        t.register(f"p{i}", _page_loader(i % 251, s), s)
+    for c in calls:
+        i = c % len(sizes)
+        v = t.call(f"p{i}")
+        assert v[0] == i % 251 and len(v) == sizes[i]
+        assert t.resident_bytes <= cap
+
+
+# ---------------------------------------------------------------------------
+# C5: hostcall + uva
+# ---------------------------------------------------------------------------
+def test_hostcall_inside_jit():
+    hct = HostCallTable()
+
+    @jax.jit
+    def step(x):
+        y = x * 2
+        hct.hostcall(513, jnp.asarray(0), jnp.sum(y))   # CALL_METRIC
+        return y
+
+    out = jax.block_until_ready(step(jnp.ones((4,))))
+    np.testing.assert_allclose(out, 2 * np.ones((4,)))
+    assert hct.metrics[0] == [8.0]
+
+
+def test_hostcall_user_registration_and_value_return():
+    hct = HostCallTable()
+    seen = []
+    num = hct.register(lambda a: (seen.append(float(a)), np.float32(a * 3))[1])
+    assert num >= 1024
+
+    @jax.jit
+    def step(x):
+        y = hct.hostcall_value(num, jax.ShapeDtypeStruct((), jnp.float32), x)
+        return y + 1
+
+    out = step(jnp.asarray(2.0, jnp.float32))
+    assert float(out) == 7.0
+    assert seen == [2.0]
+
+
+def test_hostcall_syscall_range_write(tmp_path):
+    hct = HostCallTable()
+    f = (tmp_path / "out.bin").open("wb")
+    data = jnp.arange(10, dtype=jnp.uint8)
+
+    @jax.jit
+    def step(x):
+        hct.hostcall(1, jnp.asarray(f.fileno()), x)     # write(2)
+        return x
+
+    jax.block_until_ready(step(data))
+    f.close()
+    assert (tmp_path / "out.bin").read_bytes() == bytes(range(10))
+
+
+def test_uva_coherence():
+    uva = UVARegistry()
+    uva.alloc("buf", (16,), np.float32)
+    uva.write("buf", np.arange(8, dtype=np.float32), offset=4)
+    dev = uva.to_device("buf")
+    assert isinstance(dev, jax.Array)
+    np.testing.assert_allclose(np.asarray(dev)[4:12], np.arange(8))
+    # device-side update flows back on sync
+    uva.update_device("buf", dev * 2)
+    host = uva.sync_to_host("buf")
+    np.testing.assert_allclose(host[4:12], 2 * np.arange(8))
+    rep = uva.report()["buf"]
+    assert rep["bytes"] == 64 and rep["on_device"]
+
+
+# ---------------------------------------------------------------------------
+# C1: placement plans
+# ---------------------------------------------------------------------------
+def test_placement_partition_and_report():
+    tree = {"layers": {"w1": np.ones((8, 8), np.float32),
+                       "w2": np.ones((8, 8), np.float32)},
+            "experts": {"e0": np.ones((16,), np.float32),
+                        "e1": np.ones((16,), np.float32)},
+            "head": np.ones((4,), np.float32)}
+    plan = (PlacementPlan()
+            .add(r"experts/", DYNAMIC)
+            .add(r"head", USRMEM))
+    placed = apply_plan(tree, plan, arena_bytes=128)
+    assert placed.classes["layers/w1"] == USRCORE
+    assert placed.classes["head"] == USRMEM
+    assert placed.classes["experts/e0"] == DYNAMIC
+    # materialize resolves every leaf (pages load on demand)
+    full = placed.materialize()
+    np.testing.assert_allclose(np.asarray(full["layers"]["w1"]),
+                               tree["layers"]["w1"])
+    np.testing.assert_allclose(np.asarray(full["experts"]["e0"]),
+                               tree["experts"]["e0"])
+    rep = placed.report()
+    assert rep["bytes"][USRCORE] == 2 * 8 * 8 * 4
+    assert rep["bytes"][USRMEM] == 16
+
+
+def test_placement_dynamic_pages_evict_under_pressure():
+    tree = {f"e{i}": np.full((32,), i, np.float32) for i in range(8)}
+    plan = PlacementPlan(default=DYNAMIC)
+    placed = apply_plan(tree, plan, arena_bytes=2 * 32 * 4)  # 2 pages max
+    for i in range(8):
+        v = placed.get(f"e{i}")
+        assert float(np.asarray(v)[0]) == i
+        assert placed.dc_table.resident_bytes <= 2 * 32 * 4
+    assert placed.dc_table.evictions >= 6
