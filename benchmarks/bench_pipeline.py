@@ -1,4 +1,11 @@
-"""Cross-pod strategy analysis: DP-across-pods vs pipeline-across-pods.
+"""Cross-pod strategy analysis + serve-engine throughput.
+
+Serve bench: drives the continuous-batching ServingEngine (three hot-loaded
+programs, per-slot admission) over a mixed-length request trace and emits
+the perf-trajectory record ``BENCH_serve.json`` (tok_per_s, decode_p50_ms,
+ttft_ms, occupancy) at the repo root.
+
+Cross-pod analysis: DP-across-pods vs pipeline-across-pods.
 
 The 2x16x16 dry-run maps the pod axis to data parallelism: gradients cross
 the (scarce) inter-pod link every step.  The pipeline substrate
@@ -16,12 +23,57 @@ from pathlib import Path
 from repro.models import registry
 from repro.runtime.pipeline import bubble_fraction
 
-DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+REPO = Path(__file__).resolve().parent.parent
+DRYRUN = REPO / "results" / "dryrun"
 CROSS_POD_BW = 50e9  # per-link; 1 effective cross-pod link per chip column
+SERVE_JSON = REPO / "BENCH_serve.json"
 
 
-def run() -> list:
-    rows = []
+def serve_throughput(smoke: bool = False) -> list:
+    """Mixed-length trace through the continuous-batching engine; records
+    the serving perf trajectory into BENCH_serve.json."""
+    import numpy as np
+    from repro.launch.serve import ServingEngine
+
+    batch, n_req, max_new = (4, 12, 8) if smoke else (4, 32, 16)
+    # group_prefill: the cold-start burst is admitted by one whole-batch
+    # prefill execution; later refills go through prefill_slot
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=batch, max_len=64,
+                        group_prefill=True)
+    rng = np.random.default_rng(0)
+    for i in range(n_req):
+        eng.submit(rng.integers(1, eng.cfg.vocab_size,
+                                size=int(rng.integers(3, 12))),
+                   max_new=int(rng.integers(2, max_new + 1)))
+    stats = eng.run()
+    progs = eng.syscore.report()["programs"]
+    record = {
+        "bench": "serve_throughput",
+        "arch": "qwen3-0.6b(reduced)",
+        "batch": batch,
+        "requests": stats["requests"],
+        "tok_per_s": stats["tok_per_s"],
+        "decode_p50_ms": stats["decode_p50_ms"],
+        "ttft_ms": stats["ttft_ms"],
+        "occupancy": stats["occupancy"],
+        "refill_admissions": stats["refill_admissions"],
+        "programs": {k: p["executions"] for k, p in progs.items()},
+    }
+    SERVE_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return [
+        ("serve_tok_per_s", stats["tok_per_s"],
+         f"{stats['requests']} reqs batch={batch} -> {SERVE_JSON.name}"),
+        ("serve_decode_p50_ms", stats["decode_p50_ms"],
+         f"occupancy={stats['occupancy']:.2f}"),
+        ("serve_ttft_ms", stats["ttft_ms"],
+         f"admitted={stats['admitted']} "
+         f"(burst prefill x{record['programs'].get('prefill', 0)}, "
+         f"prefill_slot x{record['programs'].get('prefill_slot', 0)})"),
+    ]
+
+
+def run(smoke: bool = False) -> list:
+    rows = serve_throughput(smoke=smoke)
     for arch in ("internvl2-26b", "gemma3-12b"):
         f = DRYRUN / f"{arch}__train_4k__multi.json"
         if not f.exists():

@@ -19,9 +19,9 @@ SRC = str(Path(__file__).resolve().parent.parent / "src")
 _CODE = """
 import json, time
 import jax, numpy as np
+from repro import compat
 from repro.core import treeload
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 x = rng.standard_normal((512, 512)).astype(np.float32)   # 1 MB payload
 

@@ -1,9 +1,27 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# ``--smoke`` runs every bench at toy sizes (CI budget: the whole sweep in
+# well under 60 s) — modules whose ``run`` accepts a ``smoke`` kwarg get it
+# passed through; the rest are already toy-sized.
+import argparse
+import inspect
+import os
 import sys
 import traceback
 
+# allow `python benchmarks/run.py` standalone: the bench package lives at the
+# repo root and the repro package under src/
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes for CI (<60 s total)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_hostcall, bench_load_exec, bench_pipeline,
                             bench_placement, bench_roofline, bench_treeload)
     modules = [
@@ -17,9 +35,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for label, mod in modules:
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            for name, value, derived in mod.run():
-                print(f"{name},{value:.3f},{derived}")
+            for name, value, derived in mod.run(**kwargs):
+                print(f"{name},{value:.3f},{derived}", flush=True)
         except Exception as e:
             failures += 1
             print(f"{label},-1,ERROR {e!r}", flush=True)

@@ -1,0 +1,46 @@
+"""Version-compat shims for the jax mesh API surface this repo targets.
+
+The codebase is written against the jax 0.6-era explicit-mesh API
+(``jax.make_mesh(..., axis_types=(AxisType.Auto, ...))``, ``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``).  CI and the container pin jax 0.4.x,
+where those names don't exist yet.  These shims resolve to the new API when
+present and fall back to the 0.4 equivalents, so every mesh-touching module
+(and the subprocess snippets in tests/benchmarks) has exactly one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager activating ``mesh`` for jit/sharding resolution:
+    ``jax.set_mesh`` on new jax; on old jax the Mesh object is itself the
+    context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` (0.6 API, where the flag is ``check_vma``) or the
+    0.4 experimental one (flag ``check_rep``); ``check=False`` disables the
+    replication/VMA check (the GPipe pipeline body needs that; everything
+    else keeps the safety check on, matching the pre-shim default)."""
+    import inspect
+    if hasattr(jax, "shard_map"):
+        params = inspect.signature(jax.shard_map).parameters
+        flag = "check_vma" if "check_vma" in params else "check_rep"
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{flag: check})
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)

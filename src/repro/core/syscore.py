@@ -74,8 +74,9 @@ class Syscore:
         structs = tree_structs(abstract_args)
         t0 = time.perf_counter()
         if self.mesh is not None and not getattr(self.mesh, "empty", False):
+            from repro.compat import set_mesh
             shardings = tree_shardings(abstract_args, self.rules, self.mesh)
-            with jax.set_mesh(self.mesh):
+            with set_mesh(self.mesh):
                 jf = jax.jit(fn, in_shardings=shardings,
                              out_shardings=out_shardings,
                              donate_argnums=donate_argnums)
@@ -144,7 +145,22 @@ class Syscore:
                     "executions": p.stats.executions,
                     "serialized_bytes": p.stats.serialized_bytes}
                 for k, p in self.programs.items()},
+            "hostcalls": self._hostcall_summary(),
         }
+
+    def _hostcall_summary(self) -> Dict[str, Any]:
+        """Aggregate view of the CALL_METRIC / CALL_STEP_REPORT channels —
+        the serving engine reports TTFT / decode latency / slot occupancy
+        here, so the resident executor can answer "how busy am I" without
+        any engine-side state."""
+        metrics = {
+            code: {"count": len(vals),
+                   "mean": sum(vals) / len(vals),
+                   "last": vals[-1]}
+            for code, vals in self.hostcalls.metrics.items() if vals}
+        return {"metrics": metrics,
+                "step_reports": len(self.hostcalls.step_times),
+                "log_lines": len(self.hostcalls.log_lines)}
 
 
 def cold_execute(fn: Callable, *args):

@@ -37,7 +37,9 @@ def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hf_ref, h_ref, *,
     seg = da_cs[:, None] - da_cs[None, :]         # (Q, Q)
     causal = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
         jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
-    l_mat = jnp.where(causal, jnp.exp(seg), 0.0)
+    # mask before the exp (above-diagonal seg is positive and overflows;
+    # masking after hides the inf but poisons any gradient with 0 * inf)
+    l_mat = jnp.exp(jnp.where(causal, seg, -1e30))
     cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)  # (Q, Q)
     att = cb * l_mat * dt[None, :]

@@ -28,6 +28,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import compat
 from repro.launch import hlo_analysis as ha
 from repro.launch import mesh as mesh_lib
 from repro.launch import roofline as rl
@@ -108,7 +109,7 @@ def compile_cell(arch: str, shape: str, *, multi_pod: bool,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "n_devices": mesh.size, "knobs": knobs,
            "global_batch": spec.global_batch, "seq_len": spec.seq_len}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jf = jax.jit(step, in_shardings=shardings, out_shardings=out_shardings,
                      donate_argnums=spec.donate_argnums)
         t0 = time.time()
@@ -143,6 +144,8 @@ def compile_cell(arch: str, shape: str, *, multi_pod: bool,
     # XLA's cost_analysis counts while bodies ONCE — record it for reference
     # but derive the roofline from the loop-aware analyzer (hlo_analysis.py).
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax<=0.4 returns one dict per device
+        ca = ca[0] if ca else {}
     rec["xla_reported"] = {"flops": float(ca.get("flops", 0.0)),
                            "bytes": float(ca.get("bytes accessed", 0.0))}
 

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 POD_SHAPE = (16, 16)
 MULTI_POD_SHAPE = (2, 16, 16)
 
@@ -15,9 +17,7 @@ MULTI_POD_SHAPE = (2, 16, 16)
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = MULTI_POD_SHAPE if multi_pod else POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def dp_size(mesh: jax.sharding.Mesh) -> int:

@@ -1,19 +1,37 @@
-"""Batched serving driver on the persistent executor.
+"""Continuous-batching serving engine on the persistent executor.
 
 The serving engine realizes the paper's execution model end-to-end:
 
-  * syscore boots once; ``prefill`` and ``decode`` programs are hot-loaded
-    as separate usrcore segments (C2);
+  * syscore boots once; ``prefill``, ``prefill_slot`` and ``decode``
+    programs are hot-loaded as separate usrcore segments (C2);
   * switching between programs costs a registry lookup (paper: re-execute
-    40 us vs full reload 73 ms);
+    40 us vs full reload 73 ms) — in particular ADMISSION of a new request
+    into a running batch is a re-execute of ``prefill_slot``, never a
+    recompile;
   * model weights can be placement-classified (C1): resident (usrcore),
     host-streamed (usrmem) or paged on demand (dynamic, C4 — MoE experts);
-  * request/response buffers live in the UVA registry (C5) so host code reads
-    generations with ordinary numpy indexing.
+  * request/response buffers live in the UVA registry (C5) so host code
+    reads generations with ordinary numpy indexing;
+  * engine telemetry (TTFT, decode latency, occupancy) flows through the
+    numbered hostcall table (C5) of the resident syscore.
 
-Continuous-batching-lite: a fixed decode batch; finished slots are refilled
-from the waiting queue between decode steps (state swap is host-side, which
-is exactly the hot-load invariant: mutate only between executions).
+True continuous batching (v2): every batch row ("slot") carries its own
+absolute position in the cache tree's per-slot ``pos`` vector, decode
+attention masks each row up to its own valid length, and finished slots
+are refilled from a bounded arrival-time queue BETWEEN decode steps — a
+newly admitted request is prefilled into its slot by the hot-loaded
+``prefill_slot`` program while the other slots' state is untouched (the
+hot-load invariant: mutate user segments only between executions).  Mixed-
+length traffic therefore never drains the batch the way the eSDK loader
+serialized kernels.
+
+Exactness: admission is always per-slot (batch-1 prefill scattered into
+the live cache), so every request's greedy output is token-for-token
+identical to a batch-of-1 decode of the same prompt
+(``reference_generate``).  Note right-padded prefill is position-exact for
+attention layers (pads are masked); for recurrent layers (SSM/RG-LRU) the
+padded tail enters the state, which is still engine/reference-consistent
+because both sides pad to the same ``prefill_len``.
 """
 from __future__ import annotations
 
@@ -28,8 +46,14 @@ import numpy as np
 
 from repro import steps as steps_lib
 from repro.core import Syscore
-from repro.models import registry, transformer, encdec
-from repro.sharding import make_rules, LogicalArray, tree_structs
+from repro.core.hostcall import CALL_METRIC, CALL_STEP_REPORT
+from repro.models import registry, transformer
+from repro.sharding import make_rules, LogicalArray
+
+# CALL_METRIC name codes used by the engine (schema documented in README)
+METRIC_TTFT_MS = 1        # time-to-first-token per request, ms
+METRIC_DECODE_MS = 2      # per decode-step wall latency, ms
+METRIC_OCCUPANCY = 3      # active slots / batch, per decode step
 
 
 @dataclass
@@ -37,116 +61,313 @@ class Request:
     rid: int
     prompt: np.ndarray               # (S_p,) int32
     max_new: int = 16
+    arrival_time: float = 0.0        # engine-clock time at which it may start
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    prompt_len: int = 0
+    slot: int = -1
+    t_submit: float = 0.0            # wall-clock timestamps
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
 
 
 class ServingEngine:
+    """Continuous-batching engine over three hot-loaded programs.
+
+    Parameters
+    ----------
+    arch/reduced/batch/max_len/mesh/params/seed: as the seed engine.
+    prefill_len: padded prompt length (prompts are right-padded/truncated
+        to this many tokens); defaults to ``max_len // 2``.
+    eos_id: optional token id terminating a request early.
+    max_queue: admission-queue bound; ``submit`` beyond it is rejected
+        (returns None, counted in ``rejected``).
+    clock: "wall" (seconds, default) or "step" — arrival times measured in
+        engine iterations, for deterministic scheduling tests.
+    group_prefill: when True, a burst of simultaneously-eligible requests
+        hitting an IDLE engine is admitted by ONE execution of the
+        whole-batch ``prefill`` program instead of per-slot executions.
+        Token streams match the per-slot path (asserted in tests), but the
+        batched einsums are not bit-identical on every arch (f32 low bits),
+        so the default stays per-slot — the formally exact admission.
+    """
+
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
-                 max_len: int = 128, mesh=None, params=None, seed: int = 0):
+                 max_len: int = 128, mesh=None, params=None, seed: int = 0,
+                 prefill_len: Optional[int] = None,
+                 eos_id: Optional[int] = None, max_queue: int = 64,
+                 clock: str = "wall", group_prefill: bool = False):
+        self.arch = arch
+        self.reduced = reduced
         self.cfg = registry.get_config(arch, reduced=reduced)
         assert not self.cfg.is_encdec, "decoder-only serving engine"
         self.rules = make_rules()
         self.batch = batch
         self.max_len = max_len
-        self.syscore = Syscore(mesh=mesh, rules=make_rules())
+        self.prefill_len = prefill_len or max_len // 2
+        assert 0 < self.prefill_len < max_len
+        self.eos_id = eos_id
+        self.max_queue = max_queue
+        assert clock in ("wall", "step")
+        self.clock = clock
+        self.group_prefill = group_prefill
+        self.syscore = Syscore(mesh=mesh, rules=self.rules)
         mod = steps_lib.model_module(self.cfg)
         self.params = params if params is not None else mod.init_params(
             self.cfg, jax.random.PRNGKey(seed))
 
-        # hot-load the two programs once (C2)
+        # hot-load the three programs once (C2).  prefill = whole-batch
+        # prefill (cold restore / registry compat); prefill_slot = one-slot
+        # admission into a live batch; decode = one greedy token for every
+        # slot at its own position.
         cfg = self.cfg
         p_abstract = mod.abstract_params(cfg)
         c_abstract = transformer.abstract_cache(cfg, batch, max_len)
-        tok_prefill = LogicalArray((batch, max_len // 2), jnp.int32,
-                                   ("batch", "seq"))
+        tok_batch = LogicalArray((batch, self.prefill_len), jnp.int32,
+                                 ("batch", "seq"))
+        lens_batch = LogicalArray((batch,), jnp.int32, ("batch",))
+        tok_slot = LogicalArray((1, self.prefill_len), jnp.int32,
+                                ("batch", "seq"))
         tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
-        pos = LogicalArray((), jnp.int32, ())
+        scalar = LogicalArray((), jnp.int32, ())
         prefill = steps_lib.make_prefill_step(cfg, self.rules)
+        prefill_slot = steps_lib.make_prefill_slot_step(cfg, self.rules,
+                                                        max_len)
         decode = steps_lib.make_serve_step(cfg, self.rules)
         self.syscore.hot_load(
             "prefill",
-            lambda params, caches, tokens: prefill(params, caches,
-                                                   {"tokens": tokens}),
-            (p_abstract, c_abstract, tok_prefill), donate_argnums=(1,))
+            lambda params, caches, tokens, lengths: prefill(
+                params, caches, {"tokens": tokens, "lengths": lengths}),
+            (p_abstract, c_abstract, tok_batch, lens_batch),
+            donate_argnums=(1,))
+        self.syscore.hot_load(
+            "prefill_slot", prefill_slot,
+            (p_abstract, c_abstract, tok_slot, scalar, scalar),
+            donate_argnums=(1,))
         self.syscore.hot_load("decode", decode,
-                              (p_abstract, c_abstract, tok_decode, pos),
+                              (p_abstract, c_abstract, tok_decode),
                               donate_argnums=(1,))
 
         self.caches = transformer.init_cache(cfg, batch, max_len)
         self.slots: List[Optional[Request]] = [None] * batch
         self.queue: List[Request] = []
         self.completed: List[Request] = []
-        self.pos = 0
-        self.prefill_len = max_len // 2
-        self.steps = 0
+        self.steps = 0                 # engine iterations (incl. idle ticks)
+        self.decode_steps = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.refill_admissions = 0     # admissions while other slots active
+        self._n_submitted = 0
+        self._t0 = time.perf_counter()
+
+    # -- clock ----------------------------------------------------------------
+    def now(self) -> float:
+        if self.clock == "step":
+            return float(self.steps)
+        return time.perf_counter() - self._t0
 
     # -- request management ---------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
-        req = Request(rid=len(self.queue) + len(self.completed),
-                      prompt=np.asarray(prompt, np.int32), max_new=max_new)
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               arrival_time: float = 0.0) -> Optional[Request]:
+        """Enqueue a request; None if the bounded admission queue is full."""
+        if len(self.queue) >= self.max_queue:
+            self.rejected += 1
+            return None
+        prompt = np.asarray(prompt, np.int32)[-self.prefill_len:]
+        max_new = min(max_new, self.max_len - len(prompt))
+        req = Request(rid=self._n_submitted, prompt=prompt, max_new=max_new,
+                      arrival_time=arrival_time, prompt_len=len(prompt),
+                      t_submit=time.perf_counter())
+        self._n_submitted += 1
         self.queue.append(req)
+        self.queue.sort(key=lambda r: (r.arrival_time, r.rid))
         return req
 
-    def _fill_batch(self):
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        take = min(len(free), len(self.queue))
-        if take == 0:
-            return False
-        batch_tokens = np.zeros((self.batch, self.prefill_len), np.int32)
-        for i in range(take):
-            self.slots[free[i]] = self.queue.pop(0)
-        for i, req in enumerate(self.slots):
-            if req is not None and not req.generated:
-                p = req.prompt[-self.prefill_len:]
-                batch_tokens[i, -len(p):] = p
-        # batched prefill for the whole group (simplification: group prefill)
+    def _place(self, slot: int, req: Request, last_logits: np.ndarray):
+        """Post-prefill bookkeeping shared by both admission paths."""
+        first = int(np.argmax(last_logits[: self.cfg.vocab_size]))
+        req.generated.append(first)
+        req.t_first = time.perf_counter()
+        req.slot = slot
+        self.slots[slot] = req
+        self.admitted += 1
+        # a refill = admission into a batch that is already mid-flight:
+        # some other slot's request has decoded past its prefill token and
+        # is still going.  Wave admissions (fresh batch, whether at boot or
+        # after a full drain) don't count — those are the seed engine's
+        # drain-then-refill schedule.
+        if any(s is not None and s is not req and len(s.generated) > 1
+               for s in self.slots):
+            self.refill_admissions += 1
+        self.syscore.hostcalls.dispatch(
+            CALL_METRIC, METRIC_TTFT_MS, 1e3 * req.ttft_s)
+        self._maybe_finish(req)   # max_new == 1 or instant EOS
+
+    def _admit_one(self, slot: int, req: Request):
+        """Prefill ``req`` into ``slot`` of the live batch (re-execute of the
+        hot-loaded prefill_slot program — admission never recompiles)."""
+        tokens = np.zeros((1, self.prefill_len), np.int32)
+        tokens[0, :req.prompt_len] = req.prompt
         self.caches, last = self.syscore.execute(
-            "prefill", self.params, self.caches,
-            jnp.asarray(batch_tokens))
-        self.pos = self.prefill_len
-        self._last_logits = last
-        return True
+            "prefill_slot", self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(req.prompt_len, jnp.int32))
+        self._place(slot, req, np.asarray(last))
+
+    def _admit_burst(self, reqs: List[Request]):
+        """Cold-start burst: admit every request in ONE execution of the
+        whole-batch ``prefill`` program (engine must be idle — the program
+        rewrites all rows; unused rows get a dummy length-1 prompt)."""
+        tokens = np.zeros((self.batch, self.prefill_len), np.int32)
+        lengths = np.ones((self.batch,), np.int32)
+        for i, req in enumerate(reqs):
+            tokens[i, :req.prompt_len] = req.prompt
+            lengths[i] = req.prompt_len
+        self.caches, last = self.syscore.execute(
+            "prefill", self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(lengths))
+        last = np.asarray(last)
+        for i, req in enumerate(reqs):
+            self._place(i, req, last[i])
+
+    def _admit(self):
+        """Refill free slots from the queue, earliest arrival first."""
+        t = self.now()
+        eligible = sum(1 for r in self.queue if r.arrival_time <= t)
+        if (self.group_prefill and eligible >= 2
+                and not any(s is not None for s in self.slots)):
+            burst = [self.queue.pop(0)
+                     for _ in range(min(eligible, self.batch))]
+            self._admit_burst(burst)
+            return
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                continue
+            if not self.queue or self.queue[0].arrival_time > t:
+                break
+            self._admit_one(i, self.queue.pop(0))
+
+    def _maybe_finish(self, req: Request):
+        hit_eos = self.eos_id is not None and req.generated and \
+            req.generated[-1] == self.eos_id
+        full = req.prompt_len + len(req.generated) >= self.max_len
+        if len(req.generated) >= req.max_new or hit_eos or full:
+            req.done = True
+            req.t_done = time.perf_counter()
+            self.completed.append(req)
+            if req.slot >= 0:
+                self.slots[req.slot] = None
 
     def _decode_once(self):
         tokens = np.zeros((self.batch, 1), np.int32)
         for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            tokens[i, 0] = (req.generated[-1] if req.generated
-                            else int(np.argmax(
-                                np.asarray(self._last_logits[i]))))
+            if req is not None:
+                tokens[i, 0] = req.generated[-1]
+        active = sum(s is not None for s in self.slots)
+        t1 = time.perf_counter()
         self.caches, next_tok, _ = self.syscore.execute(
-            "decode", self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self.pos, jnp.int32))
-        self.pos += 1
-        self.steps += 1
-        nt = np.asarray(next_tok)
+            "decode", self.params, self.caches, jnp.asarray(tokens))
+        nt = np.asarray(next_tok)           # blocks on the device result
+        dt = time.perf_counter() - t1
+        self.decode_steps += 1
+        self.syscore.hostcalls.dispatch(CALL_METRIC, METRIC_DECODE_MS,
+                                        1e3 * dt)
+        self.syscore.hostcalls.dispatch(CALL_METRIC, METRIC_OCCUPANCY,
+                                        active / self.batch)
+        self.syscore.hostcalls.dispatch(CALL_STEP_REPORT, self.decode_steps,
+                                        dt)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             req.generated.append(int(nt[i, 0]))
-            if len(req.generated) >= req.max_new or self.pos >= self.max_len - 1:
-                req.done = True
-                self.completed.append(req)
-                self.slots[i] = None
+            self._maybe_finish(req)
+        return dt
 
-    def run(self, max_steps: int = 1000) -> Dict[str, float]:
-        t0 = time.perf_counter()
-        decode_times = []
-        while (self.queue or any(self.slots)) and self.steps < max_steps:
-            if not any(self.slots):
-                self._fill_batch()
-            t1 = time.perf_counter()
+    def step(self) -> bool:
+        """One engine iteration: admit into free slots, then one decode step
+        for every active slot.  Returns False when no work remains."""
+        if not (self.queue or any(s is not None for s in self.slots)):
+            return False
+        self._admit()
+        if any(s is not None for s in self.slots):
             self._decode_once()
-            decode_times.append(time.perf_counter() - t1)
+        elif self.clock == "wall":
+            time.sleep(1e-4)        # waiting on a future arrival
+        self.steps += 1
+        return True
+
+    def run(self, max_steps: int = 10_000) -> Dict[str, float]:
+        """Serve until the queue and slots drain (or ``max_steps`` engine
+        iterations pass).  The engine is reusable: all counters and metric
+        windows are relative to this call, so a second run() (or the
+        memoized reference engine) gets a fresh budget and fresh stats."""
+        metrics = self.syscore.hostcalls.metrics
+        start_steps, done0 = self.steps, len(self.completed)
+        n_dec0 = len(metrics.get(METRIC_DECODE_MS, []))
+        n_ttft0 = len(metrics.get(METRIC_TTFT_MS, []))
+        dec_steps0 = self.decode_steps
+        adm0, ref0 = self.admitted, self.refill_admissions
+        t0 = time.perf_counter()
+        while self.steps - start_steps < max_steps and self.step():
+            pass
         wall = time.perf_counter() - t0
-        toks = sum(len(r.generated) for r in self.completed)
-        return {"requests": len(self.completed), "tokens": toks,
-                "wall_s": wall,
-                "tok_per_s": toks / wall if wall else 0.0,
-                "decode_p50_ms": 1e3 * sorted(decode_times)[
-                    len(decode_times) // 2] if decode_times else 0.0}
+        completed = self.completed[done0:]
+        toks = sum(len(r.generated) for r in completed)
+        decode_ms = sorted(metrics.get(METRIC_DECODE_MS, [])[n_dec0:])
+        ttft_ms = metrics.get(METRIC_TTFT_MS, [])[n_ttft0:]
+        occ = metrics.get(METRIC_OCCUPANCY, [])[n_dec0:]
+        return {
+            "requests": len(completed),
+            "tokens": toks,
+            "wall_s": wall,
+            "tok_per_s": toks / wall if wall else 0.0,
+            "decode_p50_ms": (decode_ms[len(decode_ms) // 2]
+                              if decode_ms else 0.0),
+            "ttft_ms": sum(ttft_ms) / max(len(ttft_ms), 1),
+            "occupancy": sum(occ) / max(len(occ), 1),
+            "decode_steps": self.decode_steps - dec_steps0,
+            "admitted": self.admitted - adm0,
+            # rejection happens at submit() time, outside any run() window,
+            # so it stays an engine-lifetime count
+            "rejected": self.rejected,
+            "refill_admissions": self.refill_admissions - ref0,
+        }
+
+    def drain_completed(self) -> List[Request]:
+        """Hand finished requests to the caller and release engine-side
+        history.  A long-lived resident engine otherwise grows
+        ``completed`` and the hostcall metric channels linearly with served
+        traffic; draining between run() calls bounds both."""
+        done, self.completed = self.completed, []
+        hc = self.syscore.hostcalls
+        for code in (METRIC_TTFT_MS, METRIC_DECODE_MS, METRIC_OCCUPANCY):
+            if code in hc.metrics:
+                hc.metrics[code].clear()
+        hc.step_times.clear()
+        return done
+
+    # -- reference path -------------------------------------------------------
+    def reference_generate(self, prompt: np.ndarray, max_new: int) -> List[int]:
+        """Batch-of-1 greedy decode of ``prompt`` with this engine's params —
+        the oracle each slot's output must match token for token.  The
+        reference engine is built (compiled) once and re-used: admission
+        rewrites its single slot's state completely, which is itself a v2
+        invariant this oracle relies on."""
+        ref = getattr(self, "_ref_engine", None)
+        if ref is None:
+            ref = self._ref_engine = ServingEngine(
+                self.arch, reduced=self.reduced, batch=1,
+                max_len=self.max_len, params=self.params,
+                prefill_len=self.prefill_len, eos_id=self.eos_id,
+                clock="step")
+        req = ref.submit(prompt, max_new)
+        ref.run()
+        ref.drain_completed()   # keep the memoized oracle's history bounded
+        return req.generated
 
 
 def main():
@@ -158,7 +379,7 @@ def main():
     args = ap.parse_args()
     eng = ServingEngine(args.arch, reduced=True, batch=args.batch)
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
+    for i in range(args.requests):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8), args.max_new)
     print(eng.run())
     print(eng.syscore.report()["programs"])

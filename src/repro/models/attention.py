@@ -158,6 +158,26 @@ def blockwise_attention_unrolled(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.concatenate(outs, axis=1).reshape(b, sq, h, d)
 
 
+def _valid_cache_slots(cache_len: jax.Array, b: int, c: int, *, window: int,
+                       ring: bool) -> jax.Array:
+    """(B, C) bool mask of readable cache slots.
+
+    ``cache_len`` may be a scalar (all rows share one length — the seed
+    engine's drain-then-refill layout) or a (B,) vector of per-slot lengths
+    (continuous batching: every sequence in the batch is at its own
+    position).
+    """
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32),
+                          (b,)).reshape(b, 1)
+    slot = jnp.arange(c)[None, :]
+    if ring:
+        return slot < jnp.minimum(cl, c)
+    valid = slot < cl
+    if window > 0:
+        valid &= slot >= cl - window
+    return valid
+
+
 def decode_attention_gqa(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          cache_len: jax.Array, *, window: int = 0,
                          ring: bool = False) -> jax.Array:
@@ -166,7 +186,8 @@ def decode_attention_gqa(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     Used on the head_dim-sharded decode path: every head axis is unsharded
     there, so the grouped einsum is local and the 6x (GQA 48/8) repeat
     buffer + its resharding all-to-alls disappear entirely.
-    q: (B, 1, H, D); caches: (B, C, Hk, D) with H % Hk == 0.
+    q: (B, 1, H, D); caches: (B, C, Hk, D) with H % Hk == 0;
+    cache_len: () or (B,) valid lengths.
     """
     b, _, h, d = q.shape
     c, hk = k_cache.shape[1], k_cache.shape[2]
@@ -175,14 +196,8 @@ def decode_attention_gqa(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qg = q.reshape(b, hk, g, d)
     scores = jnp.einsum("bhgd,bkhd->bhgk", qg,
                         k_cache).astype(jnp.float32) * scale
-    slot = jnp.arange(c)
-    if ring:
-        valid = slot < jnp.minimum(cache_len, c)
-    else:
-        valid = slot < cache_len
-        if window > 0:
-            valid &= slot >= cache_len - window
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid = _valid_cache_slots(cache_len, b, c, window=window, ring=ring)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, h, d)
@@ -194,9 +209,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """One-token attention against a cache.
 
     q: (B, 1, H, D); k_cache/v_cache: (B, C, Hkv, D) — repeated here;
-    cache_len: () number of valid positions.  With ``ring=True`` the cache is
-    a circular buffer of size C=window and every slot < min(cache_len, C) is
-    valid.
+    cache_len: () or (B,) number of valid positions per row.  With
+    ``ring=True`` the cache is a circular buffer of size C=window and every
+    slot < min(cache_len, C) is valid.
     """
     b, _, h, d = q.shape
     k_cache = repeat_kv(k_cache, h)
@@ -204,14 +219,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     c = k_cache.shape[1]
     scale = d ** -0.5
     scores = jnp.einsum("bqhd,bkhd->bhk", q, k_cache).astype(jnp.float32) * scale
-    slot = jnp.arange(c)
-    if ring:
-        valid = slot < jnp.minimum(cache_len, c)
-    else:
-        valid = slot < cache_len
-        if window > 0:
-            valid &= slot >= cache_len - window
-    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    valid = _valid_cache_slots(cache_len, b, c, window=window, ring=ring)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhk,bkhd->bhd", p.astype(v_cache.dtype), v_cache)
     return out[:, None]

@@ -132,8 +132,13 @@ def cell_spec(arch_id: str, shape_id: str, *, reduced: bool = False,
     else:  # decode
         caches = _abstract_cache(cfg, batch, seq)
         token = LogicalArray((batch, 1), jnp.int32, ("batch", None))
-        pos = LogicalArray((), jnp.int32, ())
-        args = (params, caches, token, pos)
+        if cfg.is_encdec:
+            # enc-dec decode still takes an explicit scalar position
+            pos = LogicalArray((), jnp.int32, ())
+            args = (params, caches, token, pos)
+        else:
+            # decoder-only: per-slot positions live inside the cache tree
+            args = (params, caches, token)
         donate = (1,)
     return CellSpec(arch=arch_id, shape=shape_id, kind=kind, cfg=cfg,
                     abstract_args=args, donate_argnums=donate,

@@ -104,7 +104,14 @@ def ssd_chunked(x, dt, a, b, c, d_skip, h0=None, chunk: int = SSD_CHUNK):
         seg = da_cs[:, :, None, :] - da_cs[:, None, :, :]       # (B,Q,Q,H)
         q = xk.shape[1]
         causal = jnp.tril(jnp.ones((q, q), bool))
-        l_mat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        # mask BEFORE the exp: above the diagonal ``seg`` is positive and
+        # grows with the chunk, so exp overflows to inf there; where() hides
+        # the inf in the forward pass but its VJP multiplies the zeroed
+        # cotangent by exp(seg) -> 0 * inf = NaN gradients (train NaN'd at
+        # step 1 once dt grew).  With the mask inside, exp(-1e30) == 0 and
+        # the gradient is exactly 0 on masked entries.
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        l_mat = jnp.exp(seg)
         cb = jnp.einsum("bin,bjn->bij", ck, bk)                  # (B,Q,Q)
         att = cb[..., None] * l_mat * dtk[:, None, :, :]         # (B,Q,Q,H)
         y_intra = jnp.einsum("bijh,bjhp->bihp", att.astype(xk.dtype), xk)

@@ -108,12 +108,31 @@ def _decode_kv_spec(cfg):
     return ("batch", None, None, None)
 
 
-def _write_prefill_cache(cache_kv, full, window: int):
-    """Write prefill keys/values (B,S,..) into a cache buffer (B,C,..)."""
-    s = full.shape[1]
+def _write_prefill_cache(cache_kv, full, window: int, lengths=None):
+    """Write prefill keys/values (B,S,..) into a cache buffer (B,C,..).
+
+    ``lengths`` (B,) marks the valid (un-padded) length of each row.  For
+    ring (window) caches the ring invariant is: slot j holds position p with
+    p % window == j, for the *last* window valid positions — with right-
+    padded rows that set differs per row, so the slots are gathered
+    per-row instead of rolled.  Slots beyond a row's length hold arbitrary
+    values; decode masks them via its per-slot valid-length check.
+    """
+    b, s = full.shape[0], full.shape[1]
     c = cache_kv.shape[1]
     if window and c == window and s >= window:
-        ring = jnp.roll(full[:, s - window:], (s - window) % window, axis=1)
+        if lengths is None:
+            ring = jnp.roll(full[:, s - window:], (s - window) % window,
+                            axis=1)
+            return ring.astype(cache_kv.dtype)
+        lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32),
+                                (b,)).reshape(b, 1)
+        j = jnp.arange(window)[None, :]
+        # latest valid position p with p % window == j (negative when the
+        # row is shorter than j+1 positions: clamped, masked at decode)
+        p = lens - 1 - ((lens - 1 - j) % window)
+        p = jnp.clip(p, 0, s - 1)
+        ring = jnp.take_along_axis(full, p[:, :, None, None], axis=1)
         return ring.astype(cache_kv.dtype)
     return jax.lax.dynamic_update_slice(
         cache_kv, full[:, :c].astype(cache_kv.dtype), (0, 0, 0, 0))
@@ -161,19 +180,23 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind):
     out_spec = ("batch", "seq_attn", "heads", None)
     if mode == "decode":
         assert cache is not None
-        q = apply_rope(q, pos[None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32),
-                       theta)
-        k = apply_rope(k, pos[None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32),
-                       theta)
+        # ``pos`` is () (whole batch at one position) or (B,) — per-slot
+        # positions for continuous batching: each row RoPE-rotates, writes
+        # its KV row and masks attention at its own absolute position.
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        q = apply_rope(q, pos_b[:, None], theta)
+        k = apply_rope(k, pos_b[:, None], theta)
         ch = _cache_heads(cfg)
         k = attn_mod.repeat_kv(k, ch)
         v = attn_mod.repeat_kv(v, ch)
         c = cache["k"].shape[1]
-        slot = (pos % c).astype(jnp.int32)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        slot = (pos_b % c).astype(jnp.int32)
+        # per-row write as an elementwise one-hot select: a scatter with
+        # per-batch indices forces GSPMD into an involuntary full-remat of
+        # the cache, while where() keeps the cache's sharding untouched
+        hit = (jnp.arange(c)[None, :] == slot[:, None])[:, :, None, None]
+        k_cache = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
         ring = bool(window) and c == window
         # sharding for the (huge) cache: heads when they divide TP cleanly,
         # else head_dim.  The head_dim path uses grouped-GQA math (no repeat
@@ -186,13 +209,13 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind):
             v_full = constrain(attn_mod.repeat_kv(v_cache, cfg.n_heads),
                                spec, rules)
             out = attn_mod.decode_attention(
-                q, k_full, v_full, pos + 1, window=window, ring=ring)
+                q, k_full, v_full, pos_b + 1, window=window, ring=ring)
         else:
             q = constrain(q, ("batch", None, None, "heads"), rules)
             k_c = constrain(k_cache, spec, rules)
             v_c = constrain(v_cache, spec, rules)
             out = attn_mod.decode_attention_gqa(
-                q, k_c, v_c, pos + 1, window=window, ring=ring)
+                q, k_c, v_c, pos_b + 1, window=window, ring=ring)
             # keep the output head_dim-sharded: pulling it to heads-sharded
             # here would force GSPMD to reshard the cache for the p@v dot
             # (involuntary full-replication fallback)
@@ -205,11 +228,14 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind):
         if mode == "prefill":
             assert cache is not None
             ch = _cache_heads(cfg)
+            # in prefill mode ``pos`` carries the per-row valid lengths
             new_cache = {
                 "k": _write_prefill_cache(cache["k"],
-                                          attn_mod.repeat_kv(k, ch), window),
+                                          attn_mod.repeat_kv(k, ch), window,
+                                          lengths=pos),
                 "v": _write_prefill_cache(cache["v"],
-                                          attn_mod.repeat_kv(v, ch), window)}
+                                          attn_mod.repeat_kv(v, ch), window,
+                                          lengths=pos)}
         # repeat kv -> full heads with one consistent 'heads' sharding
         # (avoids grouped-reshape sharding conflicts; see attention.py)
         k = constrain(attn_mod.repeat_kv(k, cfg.n_heads),
@@ -305,10 +331,16 @@ def abstract_params(cfg) -> Params:
 
 
 def abstract_cache(cfg, batch: int, cache_len: int) -> Params:
+    """Decode-state tree: per-layer KV/recurrent buffers plus a per-slot
+    ``pos`` vector (B,) — each batch row's absolute decode position.  The
+    position travels WITH the cache so hot-loaded decode programs need no
+    host-fed position argument and rows can sit at diverging positions
+    (continuous batching)."""
     unit, n_groups, tail = split_layers(cfg)
     group = {f"slot{i}": layer_cache_abstract(cfg, k, batch, cache_len)
              for i, k in enumerate(unit)}
     return {
+        "pos": LogicalArray((batch,), jnp.int32, ("batch",)),
         "groups": _stack_abstract(group, n_groups),
         "tail": {f"tail{i}": layer_cache_abstract(cfg, k, batch, cache_len)
                  for i, k in enumerate(tail)},
@@ -403,28 +435,46 @@ def logits_from_hidden(cfg, params, x, rules):
 
 
 def forward(cfg, params, tokens, *, rules, prefix_embeds=None, mode="train",
-            caches=None):
+            caches=None, lengths=None):
     """tokens: (B, S_tok); prefix_embeds: (B, P, d) stub frontend embeddings.
+
+    ``lengths`` (B,) marks per-row valid (un-padded) lengths for prefill of
+    right-padded rows; defaults to the full sequence length.  In prefill
+    mode the returned cache tree carries ``pos`` = lengths, i.e. each row's
+    next decode position.
 
     Returns (logits (B, S, V_padded), new_caches_or_None, aux_loss).
     """
     x = embed_inputs(cfg, params, tokens, prefix_embeds, rules)
-    pos = jnp.zeros((), jnp.int32)
+    b, s = x.shape[0], x.shape[1]
+    if lengths is None:
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        pos = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
     x, new_caches, aux = _run_stack(cfg, params, x, rules=rules, mode=mode,
                                     caches=caches, pos=pos)
     logits = logits_from_hidden(cfg, params, x, rules)
+    if new_caches is not None:
+        new_caches["pos"] = pos
     return logits, new_caches, aux
 
 
-def decode_step(cfg, params, caches, token, pos, *, rules):
-    """token: (B, 1) int32; pos: () int32 absolute position.
+def decode_step(cfg, params, caches, token, pos=None, *, rules):
+    """token: (B, 1) int32; pos: () or (B,) int32 absolute position(s),
+    defaulting to the per-slot ``pos`` vector carried in the cache tree.
 
-    Returns (logits (B, 1, V_padded), new_caches).
+    Returns (logits (B, 1, V_padded), new_caches) where the new cache's
+    ``pos`` advanced by one.
     """
+    b = token.shape[0]
+    if pos is None:
+        pos = caches["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = apply_embedding(params["embed"], token, rules)
     if cfg.scale_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x, new_caches, _ = _run_stack(cfg, params, x, rules=rules, mode="decode",
                                   caches=caches, pos=pos)
     logits = logits_from_hidden(cfg, params, x, rules)
+    new_caches["pos"] = pos + 1
     return logits, new_caches

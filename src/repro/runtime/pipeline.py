@@ -86,10 +86,11 @@ def pipeline_forward(stage_fn: Callable, stage_params, x_micro: jax.Array,
             jnp.where(stage == src, outputs, jnp.zeros_like(outputs)), axis)
         return outputs
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(param_specs, P()),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     return fn(stage_params, x_micro)

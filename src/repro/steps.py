@@ -142,41 +142,97 @@ def make_train_step(cfg, rules, opt_cfg: AdamWConfig, accum: int = 1,
 
 
 def make_prefill_step(cfg, rules):
-    """prefill_step(params, caches, batch) -> (caches, last_logits)."""
+    """prefill_step(params, caches, batch) -> (caches, last_logits).
+
+    Decoder-only batches may carry ``lengths`` (B,) for right-padded rows:
+    the returned cache's per-slot ``pos`` is set per row and
+    ``last_logits`` is gathered at each row's final *valid* position.
+    """
     def prefill_step(params, caches, batch):
         if cfg.is_encdec:
             logits, new_caches, _ = encdec.forward(
                 cfg, params, batch["frames"], batch["tokens"], rules=rules,
                 mode="prefill", caches=caches)
+            return new_caches, logits[:, -1]
+        lengths = batch.get("lengths")
+        logits, new_caches, _ = transformer.forward(
+            cfg, params, batch["tokens"], rules=rules,
+            prefix_embeds=batch.get("prefix_embeds"), mode="prefill",
+            caches=caches, lengths=lengths)
+        if lengths is None:
+            last = logits[:, -1]
         else:
-            logits, new_caches, _ = transformer.forward(
-                cfg, params, batch["tokens"], rules=rules,
-                prefix_embeds=batch.get("prefix_embeds"), mode="prefill",
-                caches=caches)
-        return new_caches, logits[:, -1]
+            idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+            last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        return new_caches, last
 
     return prefill_step
 
 
-def make_serve_step(cfg, rules):
-    """serve_step(params, caches, token, pos) -> (caches, next_token, logits).
+def make_prefill_slot_step(cfg, rules, cache_len: int):
+    """prefill_slot(params, caches, tokens, slot, length) -> (caches, last).
 
-    One decode step: greedy next token against the KV cache / recurrent state.
+    Admission path of the continuous-batching engine: prefill ONE request
+    (tokens (1, S) right-padded, ``length`` () valid prompt length) through
+    a fresh batch-1 cache and scatter the resulting rows into slot ``slot``
+    of the live batched cache tree — including its ``pos`` entry.  Nothing
+    outside row ``slot`` is touched, so the other slots keep decoding
+    between executions of this program; hot-loading it once means admission
+    never recompiles.  ``last`` is the (V,) logits at the final valid
+    prompt position (the first generated token's distribution).
     """
-    def serve_step(params, caches, token, pos):
-        if cfg.is_encdec:
-            logits, new_caches = encdec.decode_step(
-                cfg, params, caches, token, pos, rules=rules)
-        else:
-            logits, new_caches = transformer.decode_step(
-                cfg, params, caches, token, pos, rules=rules)
-        # mask vocab padding before argmax
-        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
-        masked = jnp.where(valid, logits, -jnp.inf)
-        next_token = jnp.argmax(masked, axis=-1).astype(jnp.int32)
-        return new_caches, next_token, logits
+    assert not cfg.is_encdec, "decoder-only serving path"
 
-    return serve_step
+    def prefill_slot(params, caches, tokens, slot, length):
+        fresh = transformer.init_cache(cfg, 1, cache_len)
+        logits, c1, _ = transformer.forward(
+            cfg, params, tokens, rules=rules, mode="prefill", caches=fresh,
+            lengths=jnp.reshape(length, (1,)))
+        # group-stacked leaves carry a leading (layers,) axis -> batch is
+        # axis 1; tail leaves and ``pos`` index batch at axis 0
+        new_caches = {
+            "pos": caches["pos"].at[slot].set(c1["pos"][0]),
+            "groups": jax.tree.map(
+                lambda cb, c1l: cb.at[:, slot].set(
+                    c1l[:, 0].astype(cb.dtype)),
+                caches["groups"], c1["groups"]),
+            "tail": jax.tree.map(
+                lambda cb, c1l: cb.at[slot].set(c1l[0].astype(cb.dtype)),
+                caches["tail"], c1["tail"]),
+        }
+        last = jnp.take(logits[0], length - 1, axis=0)
+        return new_caches, last
+
+    return prefill_slot
+
+
+def make_serve_step(cfg, rules):
+    """serve_step(params, caches, token) -> (caches, next_token, logits).
+
+    One decode step: greedy next token against the KV cache / recurrent
+    state.  Decoder-only models read each row's absolute position from the
+    per-slot ``pos`` vector inside the cache tree (and return it advanced),
+    so the host feeds only tokens.  Enc-dec keeps the explicit scalar
+    ``pos`` argument: serve_step(params, caches, token, pos).
+    """
+    def serve_step_encdec(params, caches, token, pos):
+        logits, new_caches = encdec.decode_step(
+            cfg, params, caches, token, pos, rules=rules)
+        return new_caches, _greedy(cfg, logits), logits
+
+    def serve_step(params, caches, token):
+        logits, new_caches = transformer.decode_step(
+            cfg, params, caches, token, rules=rules)
+        return new_caches, _greedy(cfg, logits), logits
+
+    return serve_step_encdec if cfg.is_encdec else serve_step
+
+
+def _greedy(cfg, logits):
+    # mask vocab padding before argmax
+    valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    masked = jnp.where(valid, logits, -jnp.inf)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
 
 
 def init_train_state(cfg, key, opt_cfg: Optional[AdamWConfig] = None):

@@ -130,9 +130,11 @@ def test_prefill_decode_matches_forward(arch, rng):
     np.testing.assert_allclose(np.asarray(last, np.float32),
                                np.asarray(full_logits[:, s - 1], np.float32),
                                rtol=2e-4, atol=2e-4)
+    # decode reads its per-slot position from the cache tree (pos == s here)
+    assert np.all(np.asarray(caches["pos"]) == s)
     serve = steps.make_serve_step(cfg, RULES)
     caches, next_tok, logits = jax.jit(serve)(
-        params, caches, tokens[:, s:s + 1], jnp.asarray(s, jnp.int32))
+        params, caches, tokens[:, s:s + 1])
     np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
                                np.asarray(full_logits[:, s], np.float32),
                                rtol=3e-4, atol=3e-4)
