@@ -65,7 +65,7 @@ def run() -> list:
 
     # row 2: AOT hot load (lower+compile once)
     t0 = time.perf_counter()
-    sc.hot_load("train", train, (abstract(state), abstract(batch)))
+    train_prog = sc.hot_load("train", train, (abstract(state), abstract(batch)))
     hotload = time.perf_counter() - t0
     rows.append(("table1_aot_hot_load", hotload * 1e6, "us; one-time"))
 
@@ -80,10 +80,10 @@ def run() -> list:
     except Exception:
         rows.append(("table1_hot_load_serialized", -1.0, "unavailable"))
 
-    # row 4: re-execute (cached dispatch)
-    sc.execute_blocking("train", state, batch)
+    # row 4: re-execute (cached dispatch through the typed handle)
+    train_prog.block(state, batch)
     reexec = _median_time(
-        lambda: jax.block_until_ready(sc.execute("train", state, batch)), n=10)
+        lambda: jax.block_until_ready(train_prog(state, batch)), n=10)
     rows.append(("table1_reexecute", reexec * 1e6,
                  f"us; speedup_vs_cold={cold / reexec:.0f}x"))
 

@@ -22,10 +22,12 @@ def main() -> None:
                     help="toy sizes for CI (<60 s total)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_hostcall, bench_load_exec, bench_pipeline,
-                            bench_placement, bench_roofline, bench_treeload)
+    from benchmarks import (bench_boot, bench_hostcall, bench_load_exec,
+                            bench_pipeline, bench_placement, bench_roofline,
+                            bench_treeload)
     modules = [
         ("load_exec(Table1+Fig2)", bench_load_exec),
+        ("boot(Table1-store)", bench_boot),
         ("placement(Table2)", bench_placement),
         ("hostcall(S3.5)", bench_hostcall),
         ("treeload(Fig2)", bench_treeload),

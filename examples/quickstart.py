@@ -50,15 +50,18 @@ def main():
         lambda a: LogicalArray(a.shape, a.dtype, (None,) * a.ndim),
         (state, batch))
     t0 = time.perf_counter()
-    sc.hot_load("train", train_step, abstract)
+    # hot_load returns a typed, callable ProgramHandle (Executor API v2)
+    train_prog = sc.hot_load("train", train_step, abstract)
     print(f"hot_load (lower+compile once): {time.perf_counter() - t0:.2f}s")
 
     t0 = time.perf_counter()
     for _ in range(10):
-        state, metrics = sc.execute("train", state, batch)
+        state, metrics = train_prog(state, batch)
     jax.block_until_ready(metrics["loss"])
     print(f"re-execute x10: {(time.perf_counter() - t0) / 10 * 1e3:.1f} "
           f"ms/step, loss={float(metrics['loss']):.3f}")
+    print(f"handle stats: {train_prog.stats.executions} executions, "
+          f"last {train_prog.stats.last_exec_s * 1e3:.1f} ms")
 
     t0 = time.perf_counter()
     cold_execute(train_step, state, batch)

@@ -1,14 +1,21 @@
 """Continuous-batching serving on the persistent executor (example c).
 
 Boots the engine once, hot-loads the prefill / prefill_slot / decode
-programs, then serves a stream of mixed-length requests with staggered
-arrival times.  Slots are refilled BETWEEN decode steps: admission of a new
-request is a re-execute of the hot-loaded ``prefill_slot`` program into one
-row of the live batch (paper's 40 us re-execute path), so the batch never
-drains while work is waiting.  Program-registry stats show the execution
-model: three compiles total, hundreds of re-executes.
+programs as typed ProgramHandles, then serves a stream of mixed-length
+requests with staggered arrival times.  Slots are refilled BETWEEN decode
+steps: admission of a new request is a re-execute of the hot-loaded
+``prefill_slot`` handle into one row of the live batch (paper's 40 us
+re-execute path), so the batch never drains while work is waiting.
+Program-registry stats show the execution model: three compiles total,
+hundreds of re-executes.
 
-Run: PYTHONPATH=src python examples/serve_batched.py --arch qwen3-0.6b
+With ``--store-dir`` the engine attaches a persistent ProgramStore (the
+paper's "program in global memory" tier): the FIRST run compiles and
+stores, a SECOND run with the same dir boots by deserialization —
+``source=store, load_s > 0, compile_s == 0`` — the Table-1 contrast.
+
+Run: PYTHONPATH=src python examples/serve_batched.py --arch qwen3-0.6b \
+         [--store-dir /tmp/progstore]
 """
 import argparse
 import sys
@@ -26,10 +33,13 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--store-dir", default=None,
+                    help="persistent program store; rerun with the same dir "
+                         "for a warm (deserialize-only) boot")
     args = ap.parse_args()
 
     eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
-                        max_len=64, clock="step")
+                        max_len=64, clock="step", store_dir=args.store_dir)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         lo = min(4, args.max_new)
@@ -40,10 +50,13 @@ def main():
     stats = eng.run()
     print("serving stats:", {k: round(v, 3) if isinstance(v, float) else v
                              for k, v in stats.items()})
-    progs = eng.syscore.report()["programs"]
-    for name, p in progs.items():
-        print(f"  program {name}: compiled once ({p['compile_s']:.2f}s), "
-              f"re-executed {p['executions']}x")
+    for name, prog in eng.programs.items():
+        s = prog.stats
+        boot = (f"compiled in {s.compile_s:.2f}s" if s.compile_s
+                else f"loaded from store in {s.load_s * 1e3:.1f}ms")
+        print(f"  program {name}: {boot}, re-executed {s.executions}x")
+    if eng.syscore.store is not None:
+        print("  program store:", eng.syscore.store.report())
     sample = eng.completed[0]
     print(f"  request 0 generated: {sample.generated}")
     ref = eng.reference_generate(sample.prompt, sample.max_new)

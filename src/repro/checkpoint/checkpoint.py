@@ -113,17 +113,36 @@ class CheckpointManager:
 
     The save itself stages device->host through the UVA registry (C5) and can
     be triggered from inside a jitted step via hostcall
-    CALL_CHECKPOINT_REQUEST (the host daemon performs the IO by proxy)."""
+    CALL_CHECKPOINT_REQUEST (the host daemon performs the IO by proxy).
+
+    Alongside the weight tree, the manager owns the job's *program store*
+    (``<dir>/programs`` — the paper's programs-in-global-memory tier): a
+    Syscore booted with it restores its executables by deserialization, so
+    a restart after preemption skips recompilation the same way restore
+    skips re-initialization.  ``save(..., syscore=...)`` additionally
+    persists any programs the store does not hold yet."""
 
     def __init__(self, directory, keep: int = 3):
         self.directory = Path(directory)
         self.directory.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.save_times: list = []
+        self._program_store = None
 
-    def save(self, step: int, tree):
+    @property
+    def program_store(self):
+        """Lazily created ProgramStore at ``<dir>/programs`` (survives
+        checkpoint GC — only ``step_*`` dirs are rolled)."""
+        if self._program_store is None:
+            from repro.core.program_store import ProgramStore
+            self._program_store = ProgramStore(self.directory / "programs")
+        return self._program_store
+
+    def save(self, step: int, tree, syscore=None):
         t0 = time.perf_counter()
         m = save_checkpoint(self.directory, step, tree)
+        if syscore is not None:
+            syscore.persist(self.program_store)
         self.save_times.append(time.perf_counter() - t0)
         self._gc()
         return m

@@ -2,6 +2,7 @@
 
 C1 placement.py      memory-placement qualifiers (usrcore/usrmem/dynamic)
 C2 syscore.py        persistent executor: hot-load / re-execute
+   program_store.py  typed ProgramSpec/Handle + on-disk executable store
 C3 treeload.py       O(log N) tree broadcast weight/program dissemination
 C4 dynamic_calls.py  paged weights & programs with jump table + LRU arena
 C5 hostcall.py/uva.py  host-call RPC (numbered ABI) + unified address space
@@ -12,7 +13,11 @@ from repro.core.hostcall import (CALL_CHECKPOINT_REQUEST, CALL_LOG,
                                  HostCallTable, hostcall, register_user_call)
 from repro.core.placement import (DYNAMIC, USRCORE, USRMEM, PlacedTree,
                                   PlacementPlan, apply_plan, footprint)
-from repro.core.syscore import Program, Syscore, cold_execute
+from repro.core.program_store import (ProgramHandle, ProgramSpec,
+                                      ProgramStore)
+from repro.core.syscore import (METRIC_PROGRAM_COMPILE_MS,
+                                METRIC_PROGRAM_LOAD_MS, Program, Syscore,
+                                UnknownProgramError, cold_execute)
 from repro.core.treeload import (loader_cost_model, serial_load,
                                  tree_broadcast_replicate,
                                  tree_broadcast_stacked)
@@ -24,7 +29,9 @@ __all__ = [
     "CALL_TIME", "HostCallTable", "hostcall", "register_user_call",
     "DYNAMIC", "USRCORE", "USRMEM", "PlacedTree", "PlacementPlan",
     "apply_plan", "footprint",
-    "Program", "Syscore", "cold_execute",
+    "Program", "ProgramHandle", "ProgramSpec", "ProgramStore", "Syscore",
+    "UnknownProgramError", "cold_execute",
+    "METRIC_PROGRAM_COMPILE_MS", "METRIC_PROGRAM_LOAD_MS",
     "loader_cost_model", "serial_load", "tree_broadcast_replicate",
     "tree_broadcast_stacked",
     "Buffer", "UVARegistry",

@@ -8,25 +8,52 @@ TPU/JAX analogue:
   * syscore     = this object: live mesh + sharding rules + hostcall daemon +
                   UVA buffer registry, initialized ONCE per job.
   * usrcore     = an AOT-compiled XLA executable (``jit(...).lower().compile()``)
-                  registered under a program key.  ``hot_load`` installs it
-                  without disturbing programs that are executing.
-  * re-execute  = ``execute(key, *args)``: dispatch of the cached executable
-                  with donated buffers — no re-trace, no re-compile, no
-                  re-load.  This is the 73 ms -> 40 us path of Table 1.
+                  installed from a typed :class:`ProgramSpec`.  ``hot_load``
+                  returns a callable :class:`ProgramHandle` without disturbing
+                  programs that are executing.
+  * re-execute  = calling the handle: dispatch of the cached executable with
+                  donated buffers — no re-trace, no re-compile, no re-load.
+                  This is the 73 ms -> 40 us path of Table 1.
 
-Programs can also be *serialized* ("stored in global memory") and re-installed
-via the dynamic-call table (core/dynamic_calls.py) — the C4 analogue for
-executables.
+Programs in *global memory* (paper's fast-load tier) are the job of
+:class:`~repro.core.program_store.ProgramStore`: attach one to the Syscore
+and ``hot_load`` deserializes a previously stored executable instead of
+compiling (``stats.load_s`` vs ``stats.compile_s``), falling back to
+compile-and-store on any miss.  The old string-keyed ``execute("key", ...)``
+survives as a deprecation shim over the handles.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 
+from repro.core.program_store import (ProgramHandle, ProgramSpec,
+                                      ProgramStore)
 from repro.sharding import make_rules, tree_shardings, tree_structs
+
+# CALL_METRIC name codes for program-lifecycle telemetry (engine-level codes
+# 1..3 live in repro.launch.serve; schema table in README)
+METRIC_PROGRAM_COMPILE_MS = 4     # hot_load paid a full lower+compile
+METRIC_PROGRAM_LOAD_MS = 5        # hot_load revived a stored executable
+
+
+class UnknownProgramError(KeyError):
+    """Lookup of a program key that is not installed in this Syscore."""
+
+    def __init__(self, key: str, installed):
+        self.key = key
+        self.installed = sorted(installed)
+        listing = ", ".join(repr(k) for k in self.installed) or "<none>"
+        super().__init__(
+            f"program {key!r} is not installed in this Syscore; "
+            f"installed programs: [{listing}]")
+
+    def __str__(self):
+        return self.args[0]
 
 
 @dataclass
@@ -44,15 +71,24 @@ class Program:
     key: str
     compiled: Any                  # jax.stages.Compiled
     stats: ProgramStats = field(default_factory=ProgramStats)
+    fingerprint: str = ""          # ProgramSpec content fingerprint
+    source: str = "compile"        # "compile" | "store" | "serialized"
+    serializable: Optional[bool] = None   # None = not yet attempted
 
 
 class Syscore:
-    """Persistent executor: initialize once, hot-load programs, re-execute."""
+    """Persistent executor: initialize once, hot-load programs, re-execute.
+
+    ``store`` attaches the global-memory tier: hot loads first try to
+    deserialize from it and compiles write back into it.
+    """
 
     def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
-                 rules: Optional[dict] = None):
+                 rules: Optional[dict] = None,
+                 store: Optional[ProgramStore] = None):
         self.mesh = mesh
         self.rules = rules if rules is not None else make_rules()
+        self.store = store
         self.programs: Dict[str, Program] = {}
         self._t_boot = time.perf_counter()
         # interoperability services (C5) are part of the resident system code
@@ -61,92 +97,214 @@ class Syscore:
         self.hostcalls = HostCallTable()
         self.uva = UVARegistry()
 
-    # -- program lifecycle --------------------------------------------------
-    def hot_load(self, key: str, fn: Callable, abstract_args: Tuple,
-                 *, donate_argnums: Tuple[int, ...] = (),
-                 out_shardings=None) -> Program:
-        """AOT compile ``fn`` for this executor's mesh and install it.
+    # -- registry -----------------------------------------------------------
+    def lookup(self, key: str) -> Program:
+        try:
+            return self.programs[key]
+        except KeyError:
+            raise UnknownProgramError(key, self.programs) from None
 
-        Installation never interrupts running programs: the registry swap is
-        the last, atomic step (the paper's invariant — user segments may be
-        overwritten only while execution is held in system code).
+    def handle(self, key: str) -> ProgramHandle:
+        """A handle for an already-installed program (raises otherwise)."""
+        self.lookup(key)
+        return ProgramHandle(self, key)
+
+    # -- program lifecycle --------------------------------------------------
+    def hot_load(self, spec: Union[ProgramSpec, str],
+                 fn: Optional[Callable] = None,
+                 abstract_args: Optional[Tuple] = None,
+                 *, donate_argnums: Tuple[int, ...] = (),
+                 out_shardings=None, context: str = "") -> ProgramHandle:
+        """Install the program described by ``spec`` and return its handle.
+
+        With an attached :class:`ProgramStore`, a stored executable for the
+        same (fingerprint, mesh, jax environment) is deserialized — the
+        global-memory load path, ``stats.load_s`` — instead of compiled;
+        a compile writes its result back to the store.  Installation never
+        interrupts running programs: the registry swap is the last, atomic
+        step (the paper's invariant — user segments may be overwritten only
+        while execution is held in system code).
+
+        The legacy positional form ``hot_load(key, fn, abstract_args, ...)``
+        is accepted and wrapped into a ProgramSpec.
         """
-        structs = tree_structs(abstract_args)
+        if isinstance(spec, ProgramSpec):
+            if (fn is not None or abstract_args is not None or donate_argnums
+                    or out_shardings is not None or context):
+                raise ValueError(
+                    "hot_load(ProgramSpec, ...) takes no legacy arguments; "
+                    "fold fn/abstract_args/donate_argnums/out_shardings/"
+                    "context into the spec itself")
+        else:
+            spec = ProgramSpec(key=spec, fn=fn, abstract_args=abstract_args,
+                               donate_argnums=tuple(donate_argnums),
+                               out_shardings=out_shardings, context=context)
+        prog = self._load_from_store(spec) if self.store is not None else None
+        if prog is None:
+            prog = self._compile(spec)
+            if self.store is not None:
+                self._store_program(spec, prog)
+        self.programs[spec.key] = prog         # atomic install
+        return ProgramHandle(self, spec.key)
+
+    def _compile(self, spec: ProgramSpec) -> Program:
+        structs = tree_structs(spec.abstract_args)
         t0 = time.perf_counter()
         if self.mesh is not None and not getattr(self.mesh, "empty", False):
             from repro.compat import set_mesh
-            shardings = tree_shardings(abstract_args, self.rules, self.mesh)
+            shardings = tree_shardings(spec.abstract_args, self.rules,
+                                       self.mesh)
             with set_mesh(self.mesh):
-                jf = jax.jit(fn, in_shardings=shardings,
-                             out_shardings=out_shardings,
-                             donate_argnums=donate_argnums)
+                jf = jax.jit(spec.fn, in_shardings=shardings,
+                             out_shardings=spec.out_shardings,
+                             donate_argnums=spec.donate_argnums)
                 lowered = jf.lower(*structs)
                 t1 = time.perf_counter()
                 compiled = lowered.compile()
         else:
-            jf = jax.jit(fn, donate_argnums=donate_argnums)
+            jf = jax.jit(spec.fn, donate_argnums=spec.donate_argnums)
             lowered = jf.lower(*structs)
             t1 = time.perf_counter()
             compiled = lowered.compile()
         t2 = time.perf_counter()
-        prog = Program(key=key, compiled=compiled)
+        prog = Program(key=spec.key, compiled=compiled,
+                       fingerprint=spec.fingerprint, source="compile")
         prog.stats.lower_s = t1 - t0
         prog.stats.compile_s = t2 - t1
-        self.programs[key] = prog         # atomic install
+        from repro.core.hostcall import CALL_METRIC
+        self.hostcalls.dispatch(CALL_METRIC, METRIC_PROGRAM_COMPILE_MS,
+                                1e3 * (t2 - t0))
         return prog
 
+    def _load_from_store(self, spec: ProgramSpec) -> Optional[Program]:
+        entry = self.store.get(spec, self.mesh)
+        if entry is None:
+            return None
+        payload, in_tree, out_tree = entry
+        t0 = time.perf_counter()
+        try:
+            from jax.experimental.serialize_executable import \
+                deserialize_and_load
+            compiled = deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            # stale/incompatible entry that slipped past the env key —
+            # reclassify the lookup as a miss and recompile
+            self.store.hits -= 1
+            self.store.misses += 1
+            return None
+        prog = Program(key=spec.key, compiled=compiled,
+                       fingerprint=spec.fingerprint, source="store")
+        prog.stats.load_s = time.perf_counter() - t0
+        prog.stats.serialized_bytes = len(payload)
+        from repro.core.hostcall import CALL_METRIC
+        self.hostcalls.dispatch(CALL_METRIC, METRIC_PROGRAM_LOAD_MS,
+                                1e3 * prog.stats.load_s)
+        return prog
+
+    def _store_program(self, spec, prog: Program,
+                       store: Optional[ProgramStore] = None) -> bool:
+        """Write a compiled program to global memory; programs whose
+        executables cannot be serialized (e.g. host callbacks capture
+        unpicklable state) are marked, counted and skipped, never fatal —
+        and never re-attempted."""
+        store = store if store is not None else self.store
+        if prog.serializable is False:
+            return False
+        try:
+            from jax.experimental.serialize_executable import serialize
+            payload, in_tree, out_tree = serialize(prog.compiled)
+            store.put(spec, payload, in_tree, out_tree, self.mesh)
+        except Exception:
+            prog.serializable = False
+            store.skipped += 1
+            return False
+        prog.serializable = True
+        prog.stats.serialized_bytes = len(payload)
+        return True
+
     def install_serialized(self, key: str, payload: bytes, in_tree,
-                           out_tree) -> Program:
+                           out_tree) -> ProgramHandle:
         """Hot-load a previously serialized executable (program 'in global
         memory').  The cost scales with the executable size only — the C3/C4
         load path."""
         from jax.experimental.serialize_executable import deserialize_and_load
         t0 = time.perf_counter()
         compiled = deserialize_and_load(payload, in_tree, out_tree)
-        prog = Program(key=key, compiled=compiled)
+        prog = Program(key=key, compiled=compiled, source="serialized")
         prog.stats.load_s = time.perf_counter() - t0
         prog.stats.serialized_bytes = len(payload)
+        from repro.core.hostcall import CALL_METRIC
+        self.hostcalls.dispatch(CALL_METRIC, METRIC_PROGRAM_LOAD_MS,
+                                1e3 * prog.stats.load_s)
         self.programs[key] = prog
-        return prog
+        return ProgramHandle(self, key)
 
     def serialize(self, key: str):
         """Program -> (payload, in_tree, out_tree) for global-memory storage."""
         from jax.experimental.serialize_executable import serialize
-        prog = self.programs[key]
+        prog = self.lookup(key)
         payload, in_tree, out_tree = serialize(prog.compiled)
         prog.stats.serialized_bytes = len(payload)
         return payload, in_tree, out_tree
 
-    def evict(self, key: str):
-        self.programs.pop(key, None)
+    def persist(self, store: Optional[ProgramStore] = None) -> int:
+        """Serialize every installed program into ``store`` (default: the
+        attached store) under its recorded fingerprint; returns how many
+        were newly written.  Programs without a fingerprint or that refuse
+        to serialize are skipped."""
+        store = store if store is not None else self.store
+        if store is None:
+            return 0
+        written = 0
+        for prog in self.programs.values():
+            if not prog.fingerprint:
+                continue
+            spec = _FingerprintOnlySpec(prog.key, prog.fingerprint)
+            if store.contains(spec, self.mesh):
+                continue
+            if self._store_program(spec, prog, store):
+                written += 1
+        return written
 
-    # -- execution ----------------------------------------------------------
+    def evict(self, key: str):
+        self.lookup(key)
+        del self.programs[key]
+
+    # -- execution (deprecation shim over ProgramHandle) ---------------------
     def execute(self, key: str, *args):
-        """Re-execute path: cached executable dispatch (Table 1 last row)."""
-        prog = self.programs[key]
-        t0 = time.perf_counter()
-        out = prog.compiled(*args)
-        prog.stats.last_exec_s = time.perf_counter() - t0
-        prog.stats.executions += 1
-        return out
+        """Deprecated string-keyed re-execute; use the ProgramHandle
+        returned by ``hot_load`` (or ``handle(key)``) instead."""
+        warnings.warn(
+            "Syscore.execute(key, ...) is deprecated; call the "
+            "ProgramHandle returned by hot_load()/handle() instead",
+            DeprecationWarning, stacklevel=2)
+        return ProgramHandle(self, key)(*args)
 
     def execute_blocking(self, key: str, *args):
-        out = self.execute(key, *args)
-        return jax.block_until_ready(out)
+        warnings.warn(
+            "Syscore.execute_blocking(key, ...) is deprecated; use "
+            "handle(key).block(...) instead",
+            DeprecationWarning, stacklevel=2)
+        return ProgramHandle(self, key).block(*args)
 
     # -- introspection -------------------------------------------------------
     def report(self) -> Dict[str, Any]:
-        return {
+        rep = {
             "uptime_s": time.perf_counter() - self._t_boot,
             "programs": {
                 k: {"lower_s": p.stats.lower_s,
                     "compile_s": p.stats.compile_s,
                     "load_s": p.stats.load_s,
                     "executions": p.stats.executions,
-                    "serialized_bytes": p.stats.serialized_bytes}
+                    "serialized_bytes": p.stats.serialized_bytes,
+                    "source": p.source,
+                    "fingerprint": p.fingerprint[:12]}
                 for k, p in self.programs.items()},
             "hostcalls": self._hostcall_summary(),
         }
+        if self.store is not None:
+            rep["store"] = self.store.report()
+        return rep
 
     def _hostcall_summary(self) -> Dict[str, Any]:
         """Aggregate view of the CALL_METRIC / CALL_STEP_REPORT channels —
@@ -161,6 +319,17 @@ class Syscore:
         return {"metrics": metrics,
                 "step_reports": len(self.hostcalls.step_times),
                 "log_lines": len(self.hostcalls.log_lines)}
+
+
+class _FingerprintOnlySpec:
+    """Duck-typed ProgramSpec substitute for ``persist``: the fingerprint is
+    already known, so no fn/abstract-args are needed to key the store."""
+
+    __slots__ = ("key", "fingerprint")
+
+    def __init__(self, key: str, fingerprint: str):
+        self.key = key
+        self.fingerprint = fingerprint
 
 
 def cold_execute(fn: Callable, *args):

@@ -36,6 +36,7 @@ because both sides pad to the same ``prefill_len``.
 from __future__ import annotations
 
 import argparse
+import bisect
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -45,10 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import steps as steps_lib
-from repro.core import Syscore
+from repro.core import ProgramStore, Syscore
 from repro.core.hostcall import CALL_METRIC, CALL_STEP_REPORT
 from repro.models import registry, transformer
-from repro.sharding import make_rules, LogicalArray
+from repro.sharding import make_rules
 
 # CALL_METRIC name codes used by the engine (schema documented in README)
 METRIC_TTFT_MS = 1        # time-to-first-token per request, ms
@@ -94,13 +95,19 @@ class ServingEngine:
         Token streams match the per-slot path (asserted in tests), but the
         batched einsums are not bit-identical on every arch (f32 low bits),
         so the default stays per-slot — the formally exact admission.
+    store / store_dir: the persistent program store ("global memory").
+        A warm boot deserializes prefill/prefill_slot/decode from it
+        instead of recompiling (stats: ``load_s > 0, compile_s == 0``);
+        a cold boot compiles and writes back.  ``store_dir`` is shorthand
+        for ``store=ProgramStore(store_dir)``.
     """
 
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
                  max_len: int = 128, mesh=None, params=None, seed: int = 0,
                  prefill_len: Optional[int] = None,
                  eos_id: Optional[int] = None, max_queue: int = 64,
-                 clock: str = "wall", group_prefill: bool = False):
+                 clock: str = "wall", group_prefill: bool = False,
+                 store: Optional[ProgramStore] = None, store_dir=None):
         self.arch = arch
         self.reduced = reduced
         self.cfg = registry.get_config(arch, reduced=reduced)
@@ -115,7 +122,9 @@ class ServingEngine:
         assert clock in ("wall", "step")
         self.clock = clock
         self.group_prefill = group_prefill
-        self.syscore = Syscore(mesh=mesh, rules=self.rules)
+        if store is None and store_dir is not None:
+            store = ProgramStore(store_dir)
+        self.syscore = Syscore(mesh=mesh, rules=self.rules, store=store)
         mod = steps_lib.model_module(self.cfg)
         self.params = params if params is not None else mod.init_params(
             self.cfg, jax.random.PRNGKey(seed))
@@ -123,34 +132,17 @@ class ServingEngine:
         # hot-load the three programs once (C2).  prefill = whole-batch
         # prefill (cold restore / registry compat); prefill_slot = one-slot
         # admission into a live batch; decode = one greedy token for every
-        # slot at its own position.
+        # slot at its own position.  With a store attached, a warm boot
+        # installs all three by deserialization — no recompiles.
         cfg = self.cfg
-        p_abstract = mod.abstract_params(cfg)
-        c_abstract = transformer.abstract_cache(cfg, batch, max_len)
-        tok_batch = LogicalArray((batch, self.prefill_len), jnp.int32,
-                                 ("batch", "seq"))
-        lens_batch = LogicalArray((batch,), jnp.int32, ("batch",))
-        tok_slot = LogicalArray((1, self.prefill_len), jnp.int32,
-                                ("batch", "seq"))
-        tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
-        scalar = LogicalArray((), jnp.int32, ())
-        prefill = steps_lib.make_prefill_step(cfg, self.rules)
-        prefill_slot = steps_lib.make_prefill_slot_step(cfg, self.rules,
-                                                        max_len)
-        decode = steps_lib.make_serve_step(cfg, self.rules)
-        self.syscore.hot_load(
-            "prefill",
-            lambda params, caches, tokens, lengths: prefill(
-                params, caches, {"tokens": tokens, "lengths": lengths}),
-            (p_abstract, c_abstract, tok_batch, lens_batch),
-            donate_argnums=(1,))
-        self.syscore.hot_load(
-            "prefill_slot", prefill_slot,
-            (p_abstract, c_abstract, tok_slot, scalar, scalar),
-            donate_argnums=(1,))
-        self.syscore.hot_load("decode", decode,
-                              (p_abstract, c_abstract, tok_decode),
-                              donate_argnums=(1,))
+        specs = steps_lib.serve_program_specs(
+            cfg, self.rules, batch=batch, max_len=max_len,
+            prefill_len=self.prefill_len)
+        self.programs = {name: self.syscore.hot_load(spec)
+                         for name, spec in specs.items()}
+        self._prefill = self.programs["prefill"]
+        self._prefill_slot = self.programs["prefill_slot"]
+        self._decode = self.programs["decode"]
 
         self.caches = transformer.init_cache(cfg, batch, max_len)
         self.slots: List[Optional[Request]] = [None] * batch
@@ -183,8 +175,8 @@ class ServingEngine:
                       arrival_time=arrival_time, prompt_len=len(prompt),
                       t_submit=time.perf_counter())
         self._n_submitted += 1
-        self.queue.append(req)
-        self.queue.sort(key=lambda r: (r.arrival_time, r.rid))
+        bisect.insort(self.queue, req,
+                      key=lambda r: (r.arrival_time, r.rid))
         return req
 
     def _place(self, slot: int, req: Request, last_logits: np.ndarray):
@@ -212,8 +204,8 @@ class ServingEngine:
         hot-loaded prefill_slot program — admission never recompiles)."""
         tokens = np.zeros((1, self.prefill_len), np.int32)
         tokens[0, :req.prompt_len] = req.prompt
-        self.caches, last = self.syscore.execute(
-            "prefill_slot", self.params, self.caches, jnp.asarray(tokens),
+        self.caches, last = self._prefill_slot(
+            self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(slot, jnp.int32),
             jnp.asarray(req.prompt_len, jnp.int32))
         self._place(slot, req, np.asarray(last))
@@ -227,8 +219,8 @@ class ServingEngine:
         for i, req in enumerate(reqs):
             tokens[i, :req.prompt_len] = req.prompt
             lengths[i] = req.prompt_len
-        self.caches, last = self.syscore.execute(
-            "prefill", self.params, self.caches, jnp.asarray(tokens),
+        self.caches, last = self._prefill(
+            self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(lengths))
         last = np.asarray(last)
         for i, req in enumerate(reqs):
@@ -269,8 +261,8 @@ class ServingEngine:
                 tokens[i, 0] = req.generated[-1]
         active = sum(s is not None for s in self.slots)
         t1 = time.perf_counter()
-        self.caches, next_tok, _ = self.syscore.execute(
-            "decode", self.params, self.caches, jnp.asarray(tokens))
+        self.caches, next_tok, _ = self._decode(
+            self.params, self.caches, jnp.asarray(tokens))
         nt = np.asarray(next_tok)           # blocks on the device result
         dt = time.perf_counter() - t1
         self.decode_steps += 1
@@ -295,8 +287,12 @@ class ServingEngine:
         self._admit()
         if any(s is not None for s in self.slots):
             self._decode_once()
-        elif self.clock == "wall":
-            time.sleep(1e-4)        # waiting on a future arrival
+        elif self.clock == "wall" and self.queue:
+            # idle: sleep toward the earliest future arrival (capped so a
+            # far-future request costs O(wait/10ms) engine ticks, not a
+            # 10 kHz busy-poll that drains run()'s step budget)
+            wait = self.queue[0].arrival_time - self.now()
+            time.sleep(min(max(wait, 1e-4), 1e-2))
         self.steps += 1
         return True
 
@@ -363,7 +359,7 @@ class ServingEngine:
                 self.arch, reduced=self.reduced, batch=1,
                 max_len=self.max_len, params=self.params,
                 prefill_len=self.prefill_len, eos_id=self.eos_id,
-                clock="step")
+                clock="step", store=self.syscore.store)
         req = ref.submit(prompt, max_new)
         ref.run()
         ref.drain_completed()   # keep the memoized oracle's history bounded
@@ -376,8 +372,12 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--store-dir", default=None,
+                    help="persistent program store; a second run with the "
+                         "same dir boots by deserialization, not compile")
     args = ap.parse_args()
-    eng = ServingEngine(args.arch, reduced=True, batch=args.batch)
+    eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
+                        store_dir=args.store_dir)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8), args.max_new)

@@ -47,15 +47,21 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100,
           global_batch: int = 8, seq_len: int = 128, ckpt_dir="/tmp/repro_ckpt",
           ckpt_every: int = 25, fail_at=(), lr: float = 1e-3,
           accum: int = 1, mesh=None, log_every: int = 10,
-          seed: int = 0, max_restarts: int = 4):
+          seed: int = 0, max_restarts: int = 4,
+          in_graph_telemetry: bool = True):
     cfg = registry.get_config(arch, reduced=reduced)
     rules = make_rules()
     opt_cfg = AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps)
 
-    sys_core = Syscore(mesh=mesh, rules=rules)
     monitor = StragglerMonitor()
     injector = FaultInjector(list(fail_at))
     manager = CheckpointManager(ckpt_dir, keep=2)
+    # the checkpoint dir's program store is the job's global-memory tier: a
+    # restarted run hot-loads its train program by deserialization exactly
+    # as it restores weights (programs with in-graph hostcalls cannot be
+    # serialized — the store skips them; pass in_graph_telemetry=False for
+    # a warm-bootable train program with host-side step reports instead)
+    sys_core = Syscore(mesh=mesh, rules=rules, store=manager.program_store)
 
     # telemetry flows through the numbered hostcall ABI
     hct = sys_core.hostcalls
@@ -78,9 +84,10 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100,
                      metrics["loss"])
         return new_state, metrics
 
-    sys_core.hot_load("train", train_step,
-                      (abstract_state, abstract_batch),
-                      donate_argnums=(0,))
+    spec = steps_lib.train_program_spec(
+        cfg, rules, opt_cfg, abstract_state, abstract_batch, accum=accum,
+        fn=train_step if in_graph_telemetry else None)
+    train_prog = sys_core.hot_load(spec)
 
     losses = []
 
@@ -94,9 +101,13 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100,
         for step, batch in pipeline.run(start_step, steps - start_step):
             injector.check(step)
             t0 = time.perf_counter()
-            state, metrics = sys_core.execute("train", state, batch)
+            state, metrics = train_prog(state, batch)
             loss = float(metrics["loss"])
             wall = time.perf_counter() - t0
+            if not in_graph_telemetry:
+                # same (step, loss) payload as the in-graph hostcall so the
+                # CALL_STEP_REPORT channel is mode-independent
+                hct.dispatch(CALL_STEP_REPORT, step, loss)
             monitor.observe(wall)
             losses.append(loss)
             if step % log_every == 0:
@@ -104,8 +115,8 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100,
                       f"gnorm {float(metrics['grad_norm']):.3f} "
                       f"wall {wall*1e3:.1f}ms", flush=True)
             if step and step % ckpt_every == 0:
-                manager.save(step, state)
-        manager.save(steps - 1, state)
+                manager.save(step, state, syscore=sys_core)
+        manager.save(steps - 1, state, syscore=sys_core)
         return steps - 1
 
     def resume_step() -> int:
@@ -122,6 +133,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100,
         "first_loss": losses[0] if losses else float("nan"),
         "straggler": monitor.summary(),
         "programs": sys_core.report()["programs"],
+        "program_store": sys_core.store.report(),
         "telemetry_points": len(hct.step_times),
     })
     return result
@@ -140,11 +152,16 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--host-telemetry", action="store_true",
+                    help="report step telemetry host-side instead of via "
+                         "in-graph hostcall, which makes the train program "
+                         "serializable into the checkpoint's program store")
     args = ap.parse_args()
     res = train(args.arch, reduced=args.reduced, steps=args.steps,
                 global_batch=args.batch, seq_len=args.seq, accum=args.accum,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                fail_at=args.fail_at, lr=args.lr)
+                fail_at=args.fail_at, lr=args.lr,
+                in_graph_telemetry=not args.host_telemetry)
     print({k: v for k, v in res.items() if k != "programs"})
 
 

@@ -3,7 +3,12 @@
 These are the programs the persistent executor (repro.core.syscore) hot-loads:
 pure functions of (params/opt_state/caches, batch) with donated buffers, one
 per (arch x shape) cell.  ``make_*`` returns a closure suitable for
-``jax.jit`` with explicit in/out shardings supplied by the launcher.
+``jax.jit`` with explicit in/out shardings supplied by the launcher, and
+``*_program_spec*`` wraps the closures into typed
+:class:`~repro.core.program_store.ProgramSpec`s — the hot-loadable unit of
+the Executor API v2 (closure-captured config is folded into the spec's
+fingerprint ``context`` so a persistent ProgramStore never confuses two
+architectures that happen to share shapes).
 """
 from __future__ import annotations
 
@@ -226,6 +231,72 @@ def make_serve_step(cfg, rules):
         return new_caches, _greedy(cfg, logits), logits
 
     return serve_step_encdec if cfg.is_encdec else serve_step
+
+
+def _spec_context(cfg, rules, *extra) -> str:
+    """Fingerprint context for closure-captured configuration: the frozen
+    config dataclass repr, the sharding rules and any extra scalars."""
+    return "|".join([repr(cfg), repr(sorted(rules.items()))]
+                    + [repr(e) for e in extra])
+
+
+def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
+                        prefill_len: int):
+    """The serving engine's three programs as typed ProgramSpecs.
+
+    ``prefill`` admits a cold-start burst over the whole batch,
+    ``prefill_slot`` admits ONE request into a live batch, ``decode``
+    advances every slot one greedy token.  All three donate the cache
+    tree (argnum 1).
+    """
+    from repro.core.program_store import ProgramSpec
+    from repro.sharding import LogicalArray
+    mod = model_module(cfg)
+    p_abstract = mod.abstract_params(cfg)
+    c_abstract = transformer.abstract_cache(cfg, batch, max_len)
+    tok_batch = LogicalArray((batch, prefill_len), jnp.int32,
+                             ("batch", "seq"))
+    lens_batch = LogicalArray((batch,), jnp.int32, ("batch",))
+    tok_slot = LogicalArray((1, prefill_len), jnp.int32, ("batch", "seq"))
+    tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
+    scalar = LogicalArray((), jnp.int32, ())
+    prefill = make_prefill_step(cfg, rules)
+    context = _spec_context(cfg, rules, batch, max_len, prefill_len)
+
+    def prefill_batch(params, caches, tokens, lengths):
+        return prefill(params, caches,
+                       {"tokens": tokens, "lengths": lengths})
+
+    return {
+        "prefill": ProgramSpec(
+            key="prefill", fn=prefill_batch,
+            abstract_args=(p_abstract, c_abstract, tok_batch, lens_batch),
+            donate_argnums=(1,), context=context),
+        "prefill_slot": ProgramSpec(
+            key="prefill_slot",
+            fn=make_prefill_slot_step(cfg, rules, max_len),
+            abstract_args=(p_abstract, c_abstract, tok_slot, scalar, scalar),
+            donate_argnums=(1,), context=context),
+        "decode": ProgramSpec(
+            key="decode", fn=make_serve_step(cfg, rules),
+            abstract_args=(p_abstract, c_abstract, tok_decode),
+            donate_argnums=(1,), context=context),
+    }
+
+
+def train_program_spec(cfg, rules, opt_cfg: AdamWConfig, abstract_state,
+                       abstract_batch, *, accum: int = 1, fn=None):
+    """The train program as a typed ProgramSpec.  ``fn`` overrides the bare
+    train step (e.g. a telemetry-wrapping closure); it still fingerprints
+    under the full (cfg, opt_cfg, accum) context."""
+    from repro.core.program_store import ProgramSpec
+    if fn is None:
+        fn = make_train_step(cfg, rules, opt_cfg, accum=accum)
+    return ProgramSpec(
+        key="train", fn=fn,
+        abstract_args=(abstract_state, abstract_batch),
+        donate_argnums=(0,),
+        context=_spec_context(cfg, rules, opt_cfg, accum))
 
 
 def _greedy(cfg, logits):

@@ -39,29 +39,32 @@ def _toy_args():
     return w, x
 
 
+def _toy_abstract(w, x):
+    return (LogicalArray(w.shape, w.dtype, (None, None)),
+            LogicalArray(x.shape, x.dtype, (None, None)))
+
+
 def test_syscore_hot_load_and_reexecute():
     sc = Syscore()
     w, x = _toy_args()
-    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
-                LogicalArray(x.shape, x.dtype, (None, None)))
-    sc.hot_load("toy", _toy_step, abstract)
-    out1 = sc.execute_blocking("toy", w, x)
-    out2 = sc.execute_blocking("toy", w, x)
+    toy = sc.hot_load("toy", _toy_step, _toy_abstract(w, x))
+    out1 = toy.block(w, x)
+    out2 = toy.block(w, x)
     np.testing.assert_allclose(out1, out2)
     rep = sc.report()["programs"]["toy"]
     assert rep["executions"] == 2
     assert rep["compile_s"] > 0
+    assert rep["source"] == "compile"
+    assert toy.stats.executions == 2
 
 
 def test_syscore_reexecute_beats_cold_compile():
     sc = Syscore()
     w, x = _toy_args()
-    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
-                LogicalArray(x.shape, x.dtype, (None, None)))
-    sc.hot_load("toy", _toy_step, abstract)
-    sc.execute_blocking("toy", w, x)  # warm the dispatch path
+    toy = sc.hot_load("toy", _toy_step, _toy_abstract(w, x))
+    toy.block(w, x)  # warm the dispatch path
     t0 = time.perf_counter()
-    sc.execute_blocking("toy", w, x)
+    toy.block(w, x)
     reexec = time.perf_counter() - t0
     t0 = time.perf_counter()
     jax.block_until_ready(cold_execute(_toy_step, w, x))
@@ -71,35 +74,48 @@ def test_syscore_reexecute_beats_cold_compile():
 
 
 def test_syscore_serialize_roundtrip():
+    """serialize -> install_serialized must be output-exact vs the original
+    program, with load_s / serialized_bytes stats populated on both sides."""
     sc = Syscore()
     w, x = _toy_args()
-    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
-                LogicalArray(x.shape, x.dtype, (None, None)))
-    sc.hot_load("toy", _toy_step, abstract)
-    want = np.asarray(sc.execute_blocking("toy", w, x))
+    toy = sc.hot_load("toy", _toy_step, _toy_abstract(w, x))
+    want = np.asarray(toy.block(w, x))
     try:
         payload, in_tree, out_tree = sc.serialize("toy")
     except Exception as e:
         pytest.skip(f"executable serialization unavailable: {e}")
+    assert sc.report()["programs"]["toy"]["serialized_bytes"] == len(payload)
     sc2 = Syscore()
-    sc2.install_serialized("toy2", payload, in_tree, out_tree)
-    got = np.asarray(jax.block_until_ready(sc2.execute("toy2", w, x)))
-    np.testing.assert_allclose(got, want)
-    assert sc2.report()["programs"]["toy2"]["load_s"] > 0
+    toy2 = sc2.install_serialized("toy2", payload, in_tree, out_tree)
+    got = np.asarray(toy2.block(w, x))
+    np.testing.assert_array_equal(got, want)   # bit-exact, same executable
+    rep = sc2.report()["programs"]["toy2"]
+    assert rep["load_s"] > 0
+    assert rep["serialized_bytes"] == len(payload)
+    assert rep["source"] == "serialized"
 
 
 def test_syscore_hot_swap_does_not_disturb_other_programs():
     sc = Syscore()
     w, x = _toy_args()
-    abstract = (LogicalArray(w.shape, w.dtype, (None, None)),
-                LogicalArray(x.shape, x.dtype, (None, None)))
-    sc.hot_load("a", _toy_step, abstract)
-    out_a = np.asarray(sc.execute_blocking("a", w, x))
-    sc.hot_load("b", lambda w, x: x * 2.0, abstract)   # hot swap in another
-    np.testing.assert_allclose(
-        np.asarray(sc.execute_blocking("a", w, x)), out_a)
-    np.testing.assert_allclose(
-        np.asarray(sc.execute_blocking("b", w, x)), np.asarray(x) * 2)
+    a = sc.hot_load("a", _toy_step, _toy_abstract(w, x))
+    out_a = np.asarray(a.block(w, x))
+    b = sc.hot_load("b", lambda w, x: x * 2.0, _toy_abstract(w, x))
+    np.testing.assert_allclose(np.asarray(a.block(w, x)), out_a)
+    np.testing.assert_allclose(np.asarray(b.block(w, x)), np.asarray(x) * 2)
+
+
+def test_syscore_execute_shim_still_works_and_warns():
+    """The legacy string-keyed calls stay alive as a deprecation shim."""
+    sc = Syscore()
+    w, x = _toy_args()
+    sc.hot_load("toy", _toy_step, _toy_abstract(w, x))
+    with pytest.warns(DeprecationWarning):
+        out = np.asarray(jax.block_until_ready(sc.execute("toy", w, x)))
+    np.testing.assert_allclose(out, np.asarray(_toy_step(w, x)), rtol=1e-6)
+    with pytest.warns(DeprecationWarning):
+        sc.execute_blocking("toy", w, x)
+    assert sc.report()["programs"]["toy"]["executions"] == 2
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +164,60 @@ def test_dc_reset_and_pinning():
         tt.register("p2", _page_loader(1, 100), 100, pinned=True)
         tt.call("p1")
         tt.call("p2")   # arena full of pinned pages
+
+
+def test_dc_reset_reloads_and_unpin_makes_evictable():
+    """reset() invalidates non-pinned pages: the next call pays a fresh
+    load (loads increments), and unpin() re-exposes a page to both reset
+    and LRU pressure."""
+    t = DynamicCallTable(capacity_bytes=300)
+    t.register("a", _page_loader(1, 100), 100, pinned=True)
+    t.register("b", _page_loader(2, 100), 100)
+    t.call("a"), t.call("b")
+    t.reset()
+    assert t.resident() == ["a"]
+    t.call("b")                               # reload after invalidation
+    assert t._entries["b"].loads == 2
+    t.unpin("a")
+    t.reset()
+    assert t.resident() == []
+    assert t._entries["a"].loads == 1         # next call must reload
+    t.call("a")
+    assert t._entries["a"].loads == 2
+
+
+def test_dc_program_page_installs_into_syscore():
+    """The C4 'program page' instantiation: a serialized executable lives
+    in the DC arena; first call installs it into a Syscore (the jump-table
+    -> DC-loader path), later calls are dict hits, and reset() forces a
+    re-install — the paper's staged-application invalidation."""
+    sc = Syscore()
+    w, x = _toy_args()
+    toy = sc.hot_load("toy", _toy_step, _toy_abstract(w, x))
+    want = np.asarray(toy.block(w, x))
+    try:
+        payload, in_tree, out_tree = sc.serialize("toy")
+    except Exception as e:
+        pytest.skip(f"executable serialization unavailable: {e}")
+
+    target = Syscore()
+    installs = []
+
+    def load_program_page():
+        h = target.install_serialized("toy", payload, in_tree, out_tree)
+        installs.append(h.key)
+        return h
+
+    t = DynamicCallTable(capacity_bytes=2 * len(payload))
+    t.register("prog/toy", load_program_page, len(payload))
+    h1 = t.call("prog/toy")
+    np.testing.assert_array_equal(np.asarray(h1.block(w, x)), want)
+    assert t.call("prog/toy") is h1           # patched-branch fast path
+    assert len(installs) == 1
+    t.reset()                                 # staged-app invalidation
+    h2 = t.call("prog/toy")
+    assert len(installs) == 2
+    np.testing.assert_array_equal(np.asarray(h2.block(w, x)), want)
 
 
 def _dc_capacity_property(sizes, calls, cap):

@@ -14,6 +14,7 @@ The properties the v2 engine must hold (ISSUE 1 acceptance criteria):
 import numpy as np
 import pytest
 
+from repro.core import ProgramStore
 from repro.launch.serve import (METRIC_DECODE_MS, METRIC_OCCUPANCY,
                                 METRIC_TTFT_MS, ServingEngine)
 
@@ -152,6 +153,36 @@ def test_group_prefill_burst_matches_slot_references(arch):
     assert progs["prefill_slot"]["executions"] == 0
     for r in reqs:
         assert r.generated == eng.reference_generate(r.prompt, r.max_new)
+
+
+def test_engine_warm_boot_from_store_is_load_only_and_token_exact(tmp_path):
+    """ISSUE 2 acceptance: a warm-store boot installs prefill / prefill_slot
+    / decode by deserialization (load_s > 0, compile_s == 0, no recompile)
+    and the rebooted engine's outputs stay token-exact vs the reference."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(1, 500, size=5)
+
+    cold = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                         clock="step", store=ProgramStore(tmp_path))
+    cold_req = cold.submit(prompt, max_new=6)
+    cold.run()
+    for name, prog in cold.programs.items():
+        assert prog.program.source == "compile", name
+    if cold.syscore.store.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+
+    # rebooted process: same store directory, fresh everything else
+    warm = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                         clock="step", store=ProgramStore(tmp_path))
+    progs = warm.syscore.report()["programs"]
+    for name in ("prefill", "prefill_slot", "decode"):
+        assert progs[name]["source"] == "store", (name, progs[name])
+        assert progs[name]["load_s"] > 0, (name, progs[name])
+        assert progs[name]["compile_s"] == 0, (name, progs[name])
+    warm_req = warm.submit(prompt, max_new=6)
+    warm.run()
+    assert warm_req.generated == cold_req.generated
+    assert warm_req.generated == warm.reference_generate(prompt, 6)
 
 
 def test_run_budget_and_stats_are_per_call():
