@@ -1,0 +1,120 @@
+"""Paged KV-cache arena benchmark (paper §3.4, data-page edition).
+
+Serves a workload whose TOTAL KV footprint is at least 2x the device
+arena's capacity — the regime the unpaged engine simply cannot run — by
+paging each request's fixed-size KV blocks between the arena and the host
+tier (``repro.core.paging``), with timeslice round-robin preemption
+rotating requests through the scarce blocks.
+
+Asserts every request's token stream is EXACTLY what an unpaged engine
+(same params, same schedule policy knobs) produces, then records the
+trajectory — footprint ratio, arena hit/miss/evict counts, page faults,
+swap-outs, throughput — into ``BENCH_paging.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+PAGING_JSON = REPO / "BENCH_paging.json"
+
+
+def _workload(rng, n_req, prefill_len):
+    return [(rng.integers(1, 500, size=int(rng.integers(4, prefill_len + 1))),
+             int(rng.integers(4, 9)))
+            for _ in range(n_req)]
+
+
+def run(smoke: bool = False, arch: str = "qwen3-0.6b"):
+    from repro.launch.serve import ServingEngine
+
+    batch, max_len, kv_block = (2, 32, 8) if smoke else (4, 64, 8)
+    blocks_per_slot = max_len // kv_block
+    arena_blocks = batch * blocks_per_slot // 2       # half the batch fits
+    n_req = 4 * batch
+    rng = np.random.default_rng(0)
+
+    paged = ServingEngine(arch, reduced=True, batch=batch, max_len=max_len,
+                          clock="step", seed=0, paged=True,
+                          kv_block=kv_block, arena_blocks=arena_blocks,
+                          timeslice=3)
+    work = _workload(rng, n_req, paged.prefill_len)
+    paged_reqs = [paged.submit(p, max_new=m) for p, m in work]
+    workload_blocks = sum(paged._blocks_needed(r.prompt_len, r.max_new)
+                          for r in paged_reqs)
+    ratio = workload_blocks / arena_blocks
+    assert ratio >= 2.0, (workload_blocks, arena_blocks)
+
+    t0 = time.perf_counter()
+    stats = paged.run()
+    paged_s = time.perf_counter() - t0
+    assert stats["requests"] == n_req, stats
+    arena = paged.pager.report()
+    assert arena["evictions"] >= 1, "no arena pressure exercised"
+
+    # the unpaged oracle: same params, same workload, same step clock
+    unpaged = ServingEngine(arch, reduced=True, batch=batch, max_len=max_len,
+                            clock="step", params=paged.params)
+    unpaged_reqs = [unpaged.submit(p, max_new=m) for p, m in work]
+    unpaged.run()
+    token_exact = all(pr.generated == ur.generated
+                      for pr, ur in zip(paged_reqs, unpaged_reqs))
+    assert token_exact, "paged engine diverged from the unpaged engine"
+
+    record = {
+        "bench": "paging",
+        "arch": f"{arch}(reduced)",
+        "batch": batch,
+        "max_len": max_len,
+        "kv_block": kv_block,
+        "arena_blocks": arena_blocks,
+        "arena_capacity_bytes": arena["capacity_bytes"],
+        "workload": {"requests": n_req, "kv_blocks": workload_blocks,
+                     "kv_bytes": workload_blocks * arena["block_bytes"],
+                     "footprint_ratio": ratio},
+        "arena": {k: arena[k] for k in
+                  ("hits", "loads", "evictions", "page_faults", "swap_outs",
+                   "block_bytes")},
+        "engine": {"preemptions": stats["preemptions"],
+                   "swap_ins": stats["swap_ins"],
+                   "decode_steps": stats["decode_steps"],
+                   "arena_occupancy": stats["arena_occupancy"],
+                   "tok_per_s": stats["tok_per_s"],
+                   "wall_s": paged_s},
+        "env": {"jax": __import__("jax").__version__,
+                "backend": __import__("jax").default_backend()},
+        "token_exact": token_exact,
+    }
+    PAGING_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return [
+        ("paging_footprint_ratio", ratio,
+         f"KV footprint / arena capacity; {workload_blocks} of "
+         f"{arena_blocks} blocks -> {PAGING_JSON.name}"),
+        ("paging_page_fault_count", float(arena["page_faults"]),
+         f"swap-ins from host; evictions={arena['evictions']} "
+         f"hits={arena['hits']}"),
+        ("paging_tok_per_s", stats["tok_per_s"],
+         f"preemptions={stats['preemptions']} token_exact={token_exact}"),
+    ]
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+    for name, value, derived in run(smoke=args.smoke, arch=args.arch):
+        print(f"{name},{value:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    main()

@@ -23,11 +23,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_boot, bench_hostcall, bench_load_exec,
-                            bench_pipeline, bench_placement, bench_roofline,
-                            bench_treeload)
+                            bench_paging, bench_pipeline, bench_placement,
+                            bench_roofline, bench_treeload)
     modules = [
         ("load_exec(Table1+Fig2)", bench_load_exec),
         ("boot(Table1-store)", bench_boot),
+        ("paging(S3.4-kv)", bench_paging),
         ("placement(Table2)", bench_placement),
         ("hostcall(S3.5)", bench_hostcall),
         ("treeload(Fig2)", bench_treeload),

@@ -14,8 +14,14 @@ paper's "program in global memory" tier): the FIRST run compiles and
 stores, a SECOND run with the same dir boots by deserialization —
 ``source=store, load_s > 0, compile_s == 0`` — the Table-1 contrast.
 
+With ``--paged --arena-frac 0.5`` the KV cache becomes a paged block
+arena holding only half the batch's footprint (paper §3.4, the
+``__dynamic_call`` data-page analogue): requests rotate through the
+scarce device blocks by timeslice preemption, swapping to host DRAM and
+back, and the streams stay token-exact against the batch-of-1 reference.
+
 Run: PYTHONPATH=src python examples/serve_batched.py --arch qwen3-0.6b \
-         [--store-dir /tmp/progstore]
+         [--store-dir /tmp/progstore] [--paged --arena-frac 0.5]
 """
 import argparse
 import sys
@@ -36,10 +42,22 @@ def main():
     ap.add_argument("--store-dir", default=None,
                     help="persistent program store; rerun with the same dir "
                          "for a warm (deserialize-only) boot")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache arena (repro.core.paging)")
+    ap.add_argument("--arena-frac", type=float, default=0.5,
+                    help="arena capacity as a fraction of the full batch's "
+                         "KV footprint (paged mode)")
     args = ap.parse_args()
 
+    kv_block, max_len = 8, 64
+    paged_kw = {}
+    if args.paged:
+        full = args.batch * max_len // kv_block
+        paged_kw = dict(paged=True, kv_block=kv_block, timeslice=4,
+                        arena_blocks=max(1, int(full * args.arena_frac)))
     eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
-                        max_len=64, clock="step", store_dir=args.store_dir)
+                        max_len=max_len, clock="step",
+                        store_dir=args.store_dir, **paged_kw)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         lo = min(4, args.max_new)
@@ -57,6 +75,11 @@ def main():
         print(f"  program {name}: {boot}, re-executed {s.executions}x")
     if eng.syscore.store is not None:
         print("  program store:", eng.syscore.store.report())
+    if args.paged:
+        rep = eng.pager.report()
+        print(f"  paged arena: {rep['arena_blocks']} blocks "
+              f"({rep['capacity_bytes']}B), faults={rep['page_faults']} "
+              f"evictions={rep['evictions']} hits={rep['hits']}")
     sample = eng.completed[0]
     print(f"  request 0 generated: {sample.generated}")
     ref = eng.reference_generate(sample.prompt, sample.max_new)

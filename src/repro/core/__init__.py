@@ -5,12 +5,14 @@ C2 syscore.py        persistent executor: hot-load / re-execute
    program_store.py  typed ProgramSpec/Handle + on-disk executable store
 C3 treeload.py       O(log N) tree broadcast weight/program dissemination
 C4 dynamic_calls.py  paged weights & programs with jump table + LRU arena
+   paging.py         paged KV-cache arena for serving (blocks + block table)
 C5 hostcall.py/uva.py  host-call RPC (numbered ABI) + unified address space
 """
 from repro.core.dynamic_calls import DCEntry, DynamicCallTable, PagedExpertStore
 from repro.core.hostcall import (CALL_CHECKPOINT_REQUEST, CALL_LOG,
                                  CALL_METRIC, CALL_STEP_REPORT, CALL_TIME,
                                  HostCallTable, hostcall, register_user_call)
+from repro.core.paging import PagedKVManager
 from repro.core.placement import (DYNAMIC, USRCORE, USRMEM, PlacedTree,
                                   PlacementPlan, apply_plan, footprint)
 from repro.core.program_store import (ProgramHandle, ProgramSpec,
@@ -27,6 +29,7 @@ __all__ = [
     "DCEntry", "DynamicCallTable", "PagedExpertStore",
     "CALL_CHECKPOINT_REQUEST", "CALL_LOG", "CALL_METRIC", "CALL_STEP_REPORT",
     "CALL_TIME", "HostCallTable", "hostcall", "register_user_call",
+    "PagedKVManager",
     "DYNAMIC", "USRCORE", "USRMEM", "PlacedTree", "PlacementPlan",
     "apply_plan", "footprint",
     "Program", "ProgramHandle", "ProgramSpec", "ProgramStore", "Syscore",

@@ -43,10 +43,20 @@ class DCEntry:
 
 
 class DynamicCallTable:
-    """Jump table + LRU arena for host-resident pages."""
+    """Jump table + LRU arena for host-resident pages.
 
-    def __init__(self, capacity_bytes: int):
+    ``on_evict(entry)`` is called *before* a victim's value is dropped —
+    the writeback hook for pages whose arena-resident state must survive
+    eviction (the paged KV cache copies a victim's blocks back to the host
+    tier here).  It fires on LRU pressure AND on ``reset()`` (a stateful
+    arena must never lose pages to an invalidation); only ``remove`` — the
+    page is gone for good — skips it.
+    """
+
+    def __init__(self, capacity_bytes: int,
+                 on_evict: Optional[Callable[[DCEntry], None]] = None):
         self.capacity = int(capacity_bytes)
+        self.on_evict = on_evict
         self._entries: Dict[str, DCEntry] = {}
         self._resident_bytes = 0
         self.evictions = 0
@@ -95,19 +105,41 @@ class DynamicCallTable:
             if not victims:
                 raise MemoryError("arena full of pinned pages")
             lru = min(victims, key=lambda e: e.last_use)
-            self._evict(lru)
+            self._evict(lru, writeback=True)
 
-    def _evict(self, e: DCEntry):
+    def _evict(self, e: DCEntry, writeback: bool = False):
+        if writeback and self.on_evict is not None:
+            self.on_evict(e)
         e.value = None
         self._resident_bytes -= e.size_bytes
         self.evictions += 1
 
     # -- management ------------------------------------------------------------
     def reset(self):
-        """Invalidate every non-pinned page (the paper's DC table reset)."""
+        """Invalidate every non-pinned page (the paper's DC table reset).
+        Pages with a writeback hook registered are written back first, so
+        a reset over a stateful arena (paged KV) is lossless."""
         for e in self._entries.values():
             if e.value is not None and not e.pinned:
-                self._evict(e)
+                self._evict(e, writeback=True)
+
+    def remove(self, name: str):
+        """Deregister a page entirely (no writeback, not an eviction) —
+        the page's backing data is gone, e.g. its request completed."""
+        e = self._entries.pop(name, None)
+        if e is not None and e.value is not None:
+            self._resident_bytes -= e.size_bytes
+            e.value = None
+
+    def is_resident(self, name: str) -> bool:
+        e = self._entries.get(name)
+        return e is not None and e.value is not None
+
+    @property
+    def evictable_bytes(self) -> int:
+        """Bytes reclaimable without touching pinned pages."""
+        return sum(e.size_bytes for e in self._entries.values()
+                   if e.value is not None and not e.pinned)
 
     def pin(self, name: str):
         self._entries[name].pinned = True

@@ -1,0 +1,294 @@
+"""paging — paged KV-cache arena over the dynamic-call table (paper §3.4).
+
+The serving engine's scale limit before this module was device memory:
+every slot's full KV cache had to be resident, so concurrency x context
+length was capped by HBM.  The paper's answer to the same local-store
+pressure is ``__dynamic_call`` paging: code lives in abundant global
+memory and is copied into a small local arena on demand through a jump
+table.  Here the *data* instantiation of that mechanism manages KV state:
+
+  * each request's KV cache is a set of fixed-size **blocks** (``kv_block``
+    tokens per block, per attention layer);
+  * the device holds a capacity-bounded **arena** of physical blocks
+    (usrcore tier) inside the cache pytree, addressed through a per-slot
+    **block table** carried next to ``pos``;
+  * a request's blocks are one page in a :class:`DynamicCallTable` — LRU
+    with pinning (active decode slots are pinned), eviction writes the
+    victim's blocks back to the host tier (usrmem: plain numpy, optionally
+    registered in the UVA registry so host code can read a swapped-out
+    sequence's KV with ordinary indexing);
+  * a **resume** of a preempted request is ``table.call``: a hit re-maps
+    the still-resident physical blocks for free, a miss is a *page fault*
+    that copies the blocks back from host DRAM.
+
+Every host<->device move happens between program executions (the paper's
+hot-load invariant: user segments mutate only while execution is held in
+system code), so the decode program itself stays a pure, storable
+:class:`ProgramSpec`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamic_calls import DCEntry, DynamicCallTable
+from repro.core.placement import USRCORE, USRMEM
+
+
+def _top_key(path) -> str:
+    p = path[0]
+    return str(getattr(p, "key", getattr(p, "idx", p)))
+
+
+def _leaf_kind(path) -> str:
+    """Classify a cache-tree leaf: 'kv' (block arena), 'state' (per-slot
+    recurrent row), or 'meta' (pos / block_table)."""
+    top = _top_key(path)
+    if top in ("pos", "block_table"):
+        return "meta"
+    last = getattr(path[-1], "key", None)
+    return "kv" if last in ("k", "v") else "state"
+
+
+def _leaf_axis(path) -> int:
+    """Index axis of a cache leaf: group-stacked leaves carry a leading
+    (layers,) axis, so the arena/slot axis is 1; tail leaves use axis 0."""
+    return 1 if _top_key(path) == "groups" else 0
+
+
+def _flatten(caches):
+    return jax.tree_util.tree_flatten_with_path(caches)[0]
+
+
+def _map_with_path(fn, caches):
+    return jax.tree_util.tree_map_with_path(fn, caches)
+
+
+@dataclass
+class _Page:
+    """One request's KV footprint: resident (phys blocks mapped into the
+    arena) or swapped out (host copies of blocks + recurrent rows)."""
+    rid: int
+    n_blocks: int
+    phys: Optional[List[int]] = None        # resident physical block ids
+    host_blocks: Optional[List[np.ndarray]] = None   # swapped-out KV blocks
+    state_rows: Optional[List[np.ndarray]] = None    # recurrent rows at preempt
+
+
+class PagedKVManager:
+    """Host-side paging authority for one serving engine's KV arena.
+
+    Residency policy (LRU, pinning, byte capacity) is delegated to a
+    :class:`DynamicCallTable`; this class owns the physical-block free
+    list, the host (usrmem) tier, and the cache-pytree edits that map and
+    unmap block-table rows.  All methods that move data take the current
+    cache pytree and return the updated one — they may only be called
+    between program executions.
+    """
+
+    def __init__(self, arena_blocks: int, block_bytes: int, *,
+                 uva=None, on_fault: Optional[Callable[[int], None]] = None):
+        self.arena_blocks = int(arena_blocks)
+        # floor of 1 byte/block keeps the byte accounting congruent with the
+        # free list even for attention-free families (0 KV bytes per block)
+        self.block_bytes = max(1, int(block_bytes))
+        self.table = DynamicCallTable(self.arena_blocks * self.block_bytes,
+                                      on_evict=self._on_evict)
+        self.free: List[int] = list(range(self.arena_blocks - 1, -1, -1))
+        self.pages: Dict[int, _Page] = {}
+        self.uva = uva
+        self.on_fault = on_fault
+        self.page_faults = 0      # swap-ins that copied blocks from host
+        self.swap_outs = 0        # LRU writebacks to the host tier
+        self.hits = 0             # table calls served by resident pages
+        self.loads = 0            # table calls that ran the loader
+        self._caches = None       # staged pytree during table ops
+
+    # -- capacity ------------------------------------------------------------
+    def _name(self, rid: int) -> str:
+        return f"kv:{rid}"
+
+    def can_admit(self, rid: int, n_blocks: int) -> bool:
+        """True when ``n_blocks`` can be made resident without touching a
+        pinned (actively decoding) page."""
+        if self.table.is_resident(self._name(rid)):
+            return True
+        need = n_blocks * self.block_bytes
+        if need > self.table.capacity:
+            return False
+        free = self.table.capacity - self.table.resident_bytes
+        return need <= free + self.table.evictable_bytes
+
+    def arena_occupancy(self) -> float:
+        used = self.arena_blocks - len(self.free)
+        return used / max(self.arena_blocks, 1)
+
+    # -- admission / release --------------------------------------------------
+    def admit(self, rid: int, n_blocks: int, slot: int, caches):
+        """Reserve and map a new request's blocks; returns the updated
+        cache tree with the slot's block-table row written.  May evict
+        (write back) idle pages to make room."""
+        assert rid not in self.pages, rid
+        page = _Page(rid=rid, n_blocks=int(n_blocks))
+        self.pages[rid] = page
+        name = self._name(rid)
+        self.table.register(name, self._loader(rid),
+                            page.n_blocks * self.block_bytes)
+        caches = self._call_page(name, caches)
+        return self._write_row(caches, slot, page)
+
+    def release(self, rid: int, slot: int, caches):
+        """Request finished: free its blocks and unmap its row."""
+        page = self.pages.pop(rid)
+        if self.table.is_resident(self._name(rid)) and page.phys is not None:
+            self.free.extend(page.phys)
+        self.table.remove(self._name(rid))
+        self._drop_host(page)
+        return self._clear_row(caches, slot)
+
+    def reset(self, caches):
+        """The paper's DC-table reset applied to the KV arena: every
+        non-pinned (preempted) page writes back to the host tier and frees
+        its blocks; active (pinned) pages stay resident.  Lossless — a
+        later resume page-faults the blocks back in.  (Always reset
+        through this method, not ``table.reset()`` directly: the writeback
+        hook needs the cache tree staged.)"""
+        self._caches = caches
+        self.table.reset()
+        caches, self._caches = self._caches, None
+        return caches
+
+    # -- preemption / resume --------------------------------------------------
+    def preempt(self, rid: int, slot: int, caches):
+        """Swap a request out of its slot: the per-slot recurrent rows are
+        copied to host eagerly (the slot is reused immediately); the KV
+        blocks stay resident — unpinned — until LRU pressure writes them
+        back (lazy swap-out, so a quick resume is free)."""
+        page = self.pages[rid]
+        page.state_rows = [
+            np.asarray(jnp.take(leaf, slot, axis=_leaf_axis(path)))
+            for path, leaf in _flatten(caches)
+            if _leaf_kind(path) == "state"]
+        self.table.unpin(self._name(rid))
+        return self._clear_row(caches, slot)
+
+    def resume(self, rid: int, slot: int, caches):
+        """Swap a preempted request back in.  A still-resident page is a
+        table hit (re-map only); an evicted one is a page fault that
+        copies every block back from the host tier."""
+        page = self.pages[rid]
+        caches = self._call_page(self._name(rid), caches)
+        caches = self._write_row(caches, slot, page)
+        rows = iter(page.state_rows)
+
+        def restore(path, leaf):
+            if _leaf_kind(path) != "state":
+                return leaf
+            val = jnp.asarray(next(rows))
+            if _leaf_axis(path) == 1:
+                return leaf.at[:, slot].set(val.astype(leaf.dtype))
+            return leaf.at[slot].set(val.astype(leaf.dtype))
+
+        caches = _map_with_path(restore, caches)
+        page.state_rows = None
+        return caches
+
+    def _call_page(self, name: str, caches):
+        """``table.call`` with the cache tree staged for the loader/evictor
+        (they run inside the call and edit it); counts hit vs load."""
+        if self.table.is_resident(name):
+            self.hits += 1
+        else:
+            self.loads += 1
+        self._caches = caches
+        self.table.call(name)
+        self.table.pin(name)
+        caches, self._caches = self._caches, None
+        return caches
+
+    # -- block-table rows -----------------------------------------------------
+    def _write_row(self, caches, slot: int, page: _Page):
+        width = caches["block_table"].shape[1]
+        row = np.full((width,), -1, np.int32)
+        row[:page.n_blocks] = page.phys
+        caches["block_table"] = caches["block_table"].at[slot].set(
+            jnp.asarray(row))
+        return caches
+
+    def _clear_row(self, caches, slot: int):
+        caches["block_table"] = caches["block_table"].at[slot].set(-1)
+        return caches
+
+    # -- the DC loader / evictor (host<->device block moves) ------------------
+    def _loader(self, rid: int):
+        def load():
+            page = self.pages[rid]
+            assert len(self.free) >= page.n_blocks, "free list out of sync"
+            page.phys = [self.free.pop() for _ in range(page.n_blocks)]
+            if page.host_blocks is not None:
+                # page fault: copy the blocks back from the usrmem tier
+                blocks = iter(page.host_blocks)
+
+                def scatter(path, leaf):
+                    if _leaf_kind(path) != "kv":
+                        return leaf
+                    val = jnp.asarray(next(blocks)).astype(leaf.dtype)
+                    idx = jnp.asarray(page.phys)
+                    if _leaf_axis(path) == 1:
+                        return leaf.at[:, idx].set(val)
+                    return leaf.at[idx].set(val)
+
+                self._caches = _map_with_path(scatter, self._caches)
+                self._drop_host(page)
+                self.page_faults += 1
+                if self.on_fault is not None:
+                    self.on_fault(page.n_blocks)
+            return tuple(page.phys)
+        return load
+
+    def _on_evict(self, entry: DCEntry):
+        """LRU writeback: device -> host copy of the victim's blocks, then
+        its physical blocks return to the free list."""
+        rid = int(entry.name.split(":", 1)[1])
+        page = self.pages[rid]
+        idx = jnp.asarray(page.phys)
+        page.host_blocks = [
+            np.asarray(jnp.take(leaf, idx, axis=_leaf_axis(path)))
+            for path, leaf in _flatten(self._caches)
+            if _leaf_kind(path) == "kv"]
+        if self.uva is not None:
+            for i, blk in enumerate(page.host_blocks):
+                self.uva.bind_host(f"kvpage:{rid}/{i}", blk)
+        self.free.extend(page.phys)
+        page.phys = None
+        self.swap_outs += 1
+
+    def _drop_host(self, page: _Page):
+        if page.host_blocks is not None and self.uva is not None:
+            for i in range(len(page.host_blocks)):
+                self.uva.free(f"kvpage:{page.rid}/{i}")
+        page.host_blocks = None
+
+    # -- introspection --------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        t = self.table.report()
+        host_bytes = sum(
+            sum(b.nbytes for b in p.host_blocks)
+            for p in self.pages.values() if p.host_blocks is not None)
+        return {
+            "arena_blocks": self.arena_blocks,
+            "block_bytes": self.block_bytes,
+            "capacity_bytes": t["capacity"],
+            "free_blocks": len(self.free),
+            "occupancy": self.arena_occupancy(),
+            "hits": self.hits,            # resumes served without a copy
+            "loads": self.loads,          # block allocations (incl. faults)
+            "evictions": t["evictions"],  # LRU writebacks
+            "page_faults": self.page_faults,
+            "swap_outs": self.swap_outs,
+            "tiers": {USRCORE: t["resident_bytes"], USRMEM: host_bytes},
+        }

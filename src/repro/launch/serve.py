@@ -32,6 +32,15 @@ identical to a batch-of-1 decode of the same prompt
 attention layers (pads are masked); for recurrent layers (SSM/RG-LRU) the
 padded tail enters the state, which is still engine/reference-consistent
 because both sides pad to the same ``prefill_len``.
+
+Paged KV (v3): with ``paged=True`` the per-slot KV cache becomes fixed-
+size blocks in a capacity-bounded device arena addressed through a block
+table in the cache tree (C4 — the data-page instantiation of
+``__dynamic_call``; see ``repro.core.paging``).  Admission defers under
+arena pressure, preempted requests swap to a host-DRAM tier and swap back
+in on refill (a page fault if their blocks were evicted), and the total
+KV footprint the engine can serve is bounded by host memory, not device
+memory — token-exactly.
 """
 from __future__ import annotations
 
@@ -55,6 +64,10 @@ from repro.sharding import make_rules
 METRIC_TTFT_MS = 1        # time-to-first-token per request, ms
 METRIC_DECODE_MS = 2      # per decode-step wall latency, ms
 METRIC_OCCUPANCY = 3      # active slots / batch, per decode step
+# (codes 4/5 are program-lifecycle telemetry, repro.core.syscore)
+METRIC_PAGE_FAULT = 6     # paged KV swap-in copied blocks from host (value
+                          # = blocks moved), per fault
+METRIC_ARENA_OCCUPANCY = 7  # resident arena blocks / capacity, per decode step
 
 
 @dataclass
@@ -70,6 +83,10 @@ class Request:
     t_submit: float = 0.0            # wall-clock timestamps
     t_first: float = 0.0
     t_done: float = 0.0
+    needs_resume: bool = False       # preempted: KV lives in the pager, not
+                                     # a slot; re-admission swaps in instead
+                                     # of prefilling
+    gen_at_admit: int = 0            # len(generated) at last (re)admission
 
     @property
     def ttft_s(self) -> float:
@@ -100,6 +117,24 @@ class ServingEngine:
         instead of recompiling (stats: ``load_s > 0, compile_s == 0``);
         a cold boot compiles and writes back.  ``store_dir`` is shorthand
         for ``store=ProgramStore(store_dir)``.
+    paged: run the paged KV-cache arena (repro.core.paging).  Each slot's
+        KV becomes fixed-size blocks; the device holds a capacity-bounded
+        arena of ``arena_blocks`` physical blocks addressed through a
+        block table in the cache tree, and a request's blocks page between
+        the arena and a host-DRAM tier.  Concurrency is then bounded by
+        host memory: admission defers under arena pressure, preempted
+        requests swap out (lazily, LRU) and swap back in on refill, and
+        every request stays token-exact vs the unpaged reference.
+    kv_block: tokens per KV block (paged mode); must divide ``max_len``.
+    arena_blocks: physical blocks resident on device; default fits the
+        whole batch (no pressure).  Set it below
+        ``batch * max_len / kv_block`` to serve a KV footprint larger
+        than device memory.
+    timeslice: optional preemptive round-robin (paged mode): when a queued
+        request cannot be admitted for lack of arena space, active
+        requests that have decoded ``timeslice`` tokens since their last
+        (re)admission are preempted to make room.  ``None`` = cooperative
+        only (callers may still ``preempt()`` explicitly).
     """
 
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
@@ -107,7 +142,10 @@ class ServingEngine:
                  prefill_len: Optional[int] = None,
                  eos_id: Optional[int] = None, max_queue: int = 64,
                  clock: str = "wall", group_prefill: bool = False,
-                 store: Optional[ProgramStore] = None, store_dir=None):
+                 store: Optional[ProgramStore] = None, store_dir=None,
+                 paged: bool = False, kv_block: int = 8,
+                 arena_blocks: Optional[int] = None,
+                 timeslice: Optional[int] = None):
         self.arch = arch
         self.reduced = reduced
         self.cfg = registry.get_config(arch, reduced=reduced)
@@ -135,16 +173,46 @@ class ServingEngine:
         # slot at its own position.  With a store attached, a warm boot
         # installs all three by deserialization — no recompiles.
         cfg = self.cfg
-        specs = steps_lib.serve_program_specs(
-            cfg, self.rules, batch=batch, max_len=max_len,
-            prefill_len=self.prefill_len)
+        self.paged = paged
+        self.timeslice = timeslice
+        self.pager = None
+        if paged:
+            assert not group_prefill, \
+                "group_prefill rewrites every slot; incompatible with paging"
+            assert max_len % kv_block == 0, (max_len, kv_block)
+            self.kv_block = kv_block
+            self.blocks_per_slot = max_len // kv_block
+            self.arena_blocks = (arena_blocks if arena_blocks is not None
+                                 else batch * self.blocks_per_slot)
+            specs = steps_lib.paged_serve_program_specs(
+                cfg, self.rules, batch=batch, max_len=max_len,
+                prefill_len=self.prefill_len, kv_block=kv_block,
+                arena_blocks=self.arena_blocks)
+        else:
+            specs = steps_lib.serve_program_specs(
+                cfg, self.rules, batch=batch, max_len=max_len,
+                prefill_len=self.prefill_len)
         self.programs = {name: self.syscore.hot_load(spec)
                          for name, spec in specs.items()}
-        self._prefill = self.programs["prefill"]
+        self._prefill = self.programs.get("prefill")
         self._prefill_slot = self.programs["prefill_slot"]
         self._decode = self.programs["decode"]
 
-        self.caches = transformer.init_cache(cfg, batch, max_len)
+        if paged:
+            from repro.core.paging import PagedKVManager
+            self.caches = transformer.init_paged_cache(
+                cfg, batch, max_len, kv_block=kv_block,
+                arena_blocks=self.arena_blocks)
+            self.pager = PagedKVManager(
+                self.arena_blocks,
+                transformer.paged_block_bytes(cfg, kv_block),
+                uva=self.syscore.uva,
+                on_fault=lambda blocks: self.syscore.hostcalls.dispatch(
+                    CALL_METRIC, METRIC_PAGE_FAULT, float(blocks)))
+        else:
+            self.caches = transformer.init_cache(cfg, batch, max_len)
+        self.preemptions = 0
+        self.swap_ins = 0
         self.slots: List[Optional[Request]] = [None] * batch
         self.queue: List[Request] = []
         self.completed: List[Request] = []
@@ -171,6 +239,10 @@ class ServingEngine:
             return None
         prompt = np.asarray(prompt, np.int32)[-self.prefill_len:]
         max_new = min(max_new, self.max_len - len(prompt))
+        if self.paged and self._blocks_needed(len(prompt), max_new) > \
+                self.arena_blocks:
+            self.rejected += 1       # can never fit the arena, even alone
+            return None
         req = Request(rid=self._n_submitted, prompt=prompt, max_new=max_new,
                       arrival_time=arrival_time, prompt_len=len(prompt),
                       t_submit=time.perf_counter())
@@ -185,6 +257,7 @@ class ServingEngine:
         req.generated.append(first)
         req.t_first = time.perf_counter()
         req.slot = slot
+        req.gen_at_admit = len(req.generated)
         self.slots[slot] = req
         self.admitted += 1
         # a refill = admission into a batch that is already mid-flight:
@@ -229,6 +302,9 @@ class ServingEngine:
     def _admit(self):
         """Refill free slots from the queue, earliest arrival first."""
         t = self.now()
+        if self.paged:
+            self._admit_paged(t)
+            return
         eligible = sum(1 for r in self.queue if r.arrival_time <= t)
         if (self.group_prefill and eligible >= 2
                 and not any(s is not None for s in self.slots)):
@@ -243,6 +319,81 @@ class ServingEngine:
                 break
             self._admit_one(i, self.queue.pop(0))
 
+    # -- paged admission / preemption -----------------------------------------
+    def _blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        return -(-(prompt_len + max_new) // self.kv_block)
+
+    def _admit_paged(self, t: float):
+        """FIFO admission under memory pressure: the queue head admits only
+        when its block reservation can be made resident without touching a
+        pinned (actively decoding) page; otherwise it waits — optionally
+        rotating out slots that have used up their timeslice first."""
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                continue
+            if not self.queue or self.queue[0].arrival_time > t:
+                break
+            req = self.queue[0]
+            n_blocks = self._blocks_needed(req.prompt_len, req.max_new)
+            if not self.pager.can_admit(req.rid, n_blocks):
+                if self.timeslice is not None:
+                    self._preempt_expired()
+                if not self.pager.can_admit(req.rid, n_blocks):
+                    break
+            # remove by identity: _preempt_expired may have re-queued a
+            # victim AHEAD of the peeked head (same arrival time, smaller
+            # rid), so pop(0) could discard the victim and leave ``req``
+            # queued for a second, state-corrupting admission
+            for qi, r in enumerate(self.queue):
+                if r is req:
+                    del self.queue[qi]
+                    break
+            if req.needs_resume:
+                self._resume_one(i, req)
+            else:
+                self.caches = self.pager.admit(req.rid, n_blocks, i,
+                                               self.caches)
+                self._admit_one(i, req)
+
+    def _resume_one(self, slot: int, req: Request):
+        """Swap a preempted request back into a slot: the pager restores
+        its blocks (a hit if still resident, a page fault if they were
+        written back to host) and its recurrent rows; decode then resumes
+        from the exact position it left off, so the token stream is
+        unchanged by the round trip."""
+        self.caches = self.pager.resume(req.rid, slot, self.caches)
+        self.caches["pos"] = self.caches["pos"].at[slot].set(
+            req.prompt_len + len(req.generated) - 1)
+        req.slot = slot
+        req.needs_resume = False
+        req.gen_at_admit = len(req.generated)
+        self.slots[slot] = req
+        self.swap_ins += 1
+
+    def preempt(self, req: Request, requeue_at: Optional[float] = None):
+        """Swap an active request out of its slot and back into the queue.
+        Its recurrent rows copy to host eagerly (the slot is reused); its
+        KV blocks stay arena-resident, unpinned, until LRU pressure writes
+        them back — a prompt resume costs nothing.  ``requeue_at`` moves
+        the request behind current waiters (round-robin rotation); the
+        default keeps its original arrival time (resume ASAP)."""
+        assert self.paged and req.slot >= 0 and not req.done
+        self.caches = self.pager.preempt(req.rid, req.slot, self.caches)
+        self.slots[req.slot] = None
+        req.slot = -1
+        req.needs_resume = True
+        if requeue_at is not None:
+            req.arrival_time = requeue_at
+        bisect.insort(self.queue, req,
+                      key=lambda r: (r.arrival_time, r.rid))
+        self.preemptions += 1
+
+    def _preempt_expired(self):
+        for req in list(self.slots):
+            if req is not None and \
+                    len(req.generated) - req.gen_at_admit >= self.timeslice:
+                self.preempt(req, requeue_at=self.now())
+
     def _maybe_finish(self, req: Request):
         hit_eos = self.eos_id is not None and req.generated and \
             req.generated[-1] == self.eos_id
@@ -252,6 +403,11 @@ class ServingEngine:
             req.t_done = time.perf_counter()
             self.completed.append(req)
             if req.slot >= 0:
+                if self.paged:
+                    # idle-slot swap-out's terminal case: the request is
+                    # done, so its blocks free instead of swapping
+                    self.caches = self.pager.release(req.rid, req.slot,
+                                                     self.caches)
                 self.slots[req.slot] = None
 
     def _decode_once(self):
@@ -270,6 +426,10 @@ class ServingEngine:
                                         1e3 * dt)
         self.syscore.hostcalls.dispatch(CALL_METRIC, METRIC_OCCUPANCY,
                                         active / self.batch)
+        if self.paged:
+            self.syscore.hostcalls.dispatch(CALL_METRIC,
+                                            METRIC_ARENA_OCCUPANCY,
+                                            self.pager.arena_occupancy())
         self.syscore.hostcalls.dispatch(CALL_STEP_REPORT, self.decode_steps,
                                         dt)
         for i, req in enumerate(self.slots):
@@ -307,6 +467,9 @@ class ServingEngine:
         n_ttft0 = len(metrics.get(METRIC_TTFT_MS, []))
         dec_steps0 = self.decode_steps
         adm0, ref0 = self.admitted, self.refill_admissions
+        pre0, swi0 = self.preemptions, self.swap_ins
+        pf0 = self.pager.page_faults if self.paged else 0
+        swo0 = self.pager.swap_outs if self.paged else 0
         t0 = time.perf_counter()
         while self.steps - start_steps < max_steps and self.step():
             pass
@@ -316,7 +479,7 @@ class ServingEngine:
         decode_ms = sorted(metrics.get(METRIC_DECODE_MS, [])[n_dec0:])
         ttft_ms = metrics.get(METRIC_TTFT_MS, [])[n_ttft0:]
         occ = metrics.get(METRIC_OCCUPANCY, [])[n_dec0:]
-        return {
+        stats = {
             "requests": len(completed),
             "tokens": toks,
             "wall_s": wall,
@@ -332,6 +495,16 @@ class ServingEngine:
             "rejected": self.rejected,
             "refill_admissions": self.refill_admissions - ref0,
         }
+        if self.paged:
+            arena = metrics.get(METRIC_ARENA_OCCUPANCY, [])[n_dec0:]
+            stats.update({
+                "preemptions": self.preemptions - pre0,
+                "swap_ins": self.swap_ins - swi0,
+                "page_faults": self.pager.page_faults - pf0,
+                "swap_outs": self.pager.swap_outs - swo0,
+                "arena_occupancy": sum(arena) / max(len(arena), 1),
+            })
+        return stats
 
     def drain_completed(self) -> List[Request]:
         """Hand finished requests to the caller and release engine-side
@@ -340,7 +513,8 @@ class ServingEngine:
         traffic; draining between run() calls bounds both."""
         done, self.completed = self.completed, []
         hc = self.syscore.hostcalls
-        for code in (METRIC_TTFT_MS, METRIC_DECODE_MS, METRIC_OCCUPANCY):
+        for code in (METRIC_TTFT_MS, METRIC_DECODE_MS, METRIC_OCCUPANCY,
+                     METRIC_PAGE_FAULT, METRIC_ARENA_OCCUPANCY):
             if code in hc.metrics:
                 hc.metrics[code].clear()
         hc.step_times.clear()
@@ -375,14 +549,24 @@ def main():
     ap.add_argument("--store-dir", default=None,
                     help="persistent program store; a second run with the "
                          "same dir boots by deserialization, not compile")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache arena (repro.core.paging)")
+    ap.add_argument("--kv-block", type=int, default=8)
+    ap.add_argument("--arena-blocks", type=int, default=None,
+                    help="device-resident KV blocks; below "
+                         "batch*max_len/kv_block creates memory pressure")
     args = ap.parse_args()
     eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
-                        store_dir=args.store_dir)
+                        store_dir=args.store_dir, paged=args.paged,
+                        kv_block=args.kv_block,
+                        arena_blocks=args.arena_blocks)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8), args.max_new)
     print(eng.run())
     print(eng.syscore.report()["programs"])
+    if args.paged:
+        print(eng.pager.report())
 
 
 if __name__ == "__main__":

@@ -178,6 +178,39 @@ def _valid_cache_slots(cache_len: jax.Array, b: int, c: int, *, window: int,
     return valid
 
 
+def gather_paged_kv(arena: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Block-table-indexed cache read (the paged-KV jump-table dereference).
+
+    arena: (P, bs, H, D) physical blocks; block_table: (B, M) physical block
+    id per logical block, -1 = unmapped.  Returns the logical per-row cache
+    (B, M*bs, H, D): logical block j of row b is arena[block_table[b, j]].
+    Unmapped entries clamp to block 0 and read garbage — callers mask them
+    through the valid-length check of ``decode_attention``.
+    """
+    b, m = block_table.shape
+    bs = arena.shape[1]
+    gathered = arena[jnp.clip(block_table, 0)]
+    return gathered.reshape(b, m * bs, *arena.shape[2:])
+
+
+def write_paged_kv(arena: jax.Array, block_table: jax.Array, pos: jax.Array,
+                   val: jax.Array) -> jax.Array:
+    """Block-table-indexed cache write of one token per row.
+
+    Row b's value (B, H, D) lands in physical block
+    ``block_table[b, pos[b] // bs]`` at offset ``pos[b] % bs``.  Rows whose
+    block is unmapped (released slots, table entry -1) are dropped — their
+    physical destination is pushed out of range and ``mode='drop'`` elides
+    the scatter, so an idle slot can never corrupt a live request's block.
+    """
+    p, bs = arena.shape[0], arena.shape[1]
+    m = block_table.shape[1]
+    blk = jnp.clip(pos // bs, 0, m - 1)
+    phys = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    dest = jnp.where(phys >= 0, phys, p)
+    return arena.at[dest, pos % bs].set(val.astype(arena.dtype), mode="drop")
+
+
 def decode_attention_gqa(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          cache_len: jax.Array, *, window: int = 0,
                          ring: bool = False) -> jax.Array:

@@ -81,10 +81,13 @@ def _cache_heads(cfg) -> int:
     return cfg.decode_cache_heads or cfg.n_kv_heads
 
 
-def _attn_cache_abstract(cfg, kind, batch, cache_len) -> Params:
+def _attn_cache_abstract(cfg, kind, batch, cache_len, ring=True) -> Params:
+    """``ring=False`` gives windowed ("L") layers a full-length buffer
+    instead of the window-sized ring — the layout the paged arena needs,
+    where logical block j must hold positions [j*bs, (j+1)*bs)."""
     hd = cfg.resolved_head_dim
     c = cache_len
-    if kind == "L" and cfg.local_window:
+    if ring and kind == "L" and cfg.local_window:
         c = min(cfg.local_window, cache_len)
     shp = (batch, c, _cache_heads(cfg), hd)
     la = ("batch", None, "kv_heads", None)
@@ -138,7 +141,8 @@ def _write_prefill_cache(cache_kv, full, window: int, lengths=None):
         cache_kv, full[:, :c].astype(cache_kv.dtype), (0, 0, 0, 0))
 
 
-def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind):
+def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind,
+                block_table=None):
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
     window = cfg.local_window if kind == "L" else 0
@@ -189,6 +193,26 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind):
         ch = _cache_heads(cfg)
         k = attn_mod.repeat_kv(k, ch)
         v = attn_mod.repeat_kv(v, ch)
+        if block_table is not None:
+            # paged KV: the cache leaf is a (P, bs, ch, hd) physical-block
+            # arena shared by every slot; this row's write destination and
+            # the logical gather both resolve through the block table (the
+            # data-page jump table of repro.core.paging).  The paged path
+            # serves the single-host tier, so it keeps the simple
+            # full-repeat attention (no head_dim-sharded GQA variant).
+            k_arena = attn_mod.write_paged_kv(cache["k"], block_table,
+                                              pos_b, k[:, 0])
+            v_arena = attn_mod.write_paged_kv(cache["v"], block_table,
+                                              pos_b, v[:, 0])
+            k_log = attn_mod.gather_paged_kv(k_arena, block_table)
+            v_log = attn_mod.gather_paged_kv(v_arena, block_table)
+            out = attn_mod.decode_attention(
+                q, k_log, v_log, pos_b + 1, window=window, ring=False)
+            out = constrain(out, out_spec, rules)
+            out = jnp.einsum("bsh,hd->bsd",
+                             out.reshape(b, s, cfg.n_heads * hd), p["wo"])
+            out = constrain(out, ("batch", "seq", "embed"), rules)
+            return residual + out, {"k": k_arena, "v": v_arena}
         c = cache["k"].shape[1]
         slot = (pos_b % c).astype(jnp.int32)
         # per-row write as an elementwise one-hot select: a scatter with
@@ -276,9 +300,10 @@ def layer_abstract(cfg, kind: str) -> Params:
     return p
 
 
-def layer_cache_abstract(cfg, kind: str, batch: int, cache_len: int):
+def layer_cache_abstract(cfg, kind: str, batch: int, cache_len: int,
+                         ring: bool = True):
     if kind in ATTN_KINDS:
-        return _attn_cache_abstract(cfg, kind, batch, cache_len)
+        return _attn_cache_abstract(cfg, kind, batch, cache_len, ring=ring)
     if kind == "M":
         return ssm_mod.ssm_cache_abstract(cfg, batch)
     if kind == "R":
@@ -286,11 +311,13 @@ def layer_cache_abstract(cfg, kind: str, batch: int, cache_len: int):
     raise ValueError(kind)
 
 
-def apply_layer(cfg, kind: str, p: Params, x, *, rules, mode, cache, pos):
+def apply_layer(cfg, kind: str, p: Params, x, *, rules, mode, cache, pos,
+                block_table=None):
     aux = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
         x, new_cache = _apply_attn(cfg, p["mix"], x, rules=rules, mode=mode,
-                                   cache=cache, pos=pos, kind=kind)
+                                   cache=cache, pos=pos, kind=kind,
+                                   block_table=block_table)
     elif kind == "M":
         x, new_cache = ssm_mod.apply_ssm_layer(cfg, p["mix"], x, rules=rules,
                                                mode=mode, cache=cache)
@@ -330,21 +357,66 @@ def abstract_params(cfg) -> Params:
     return params
 
 
-def abstract_cache(cfg, batch: int, cache_len: int) -> Params:
+def abstract_cache(cfg, batch: int, cache_len: int, ring: bool = True) -> Params:
     """Decode-state tree: per-layer KV/recurrent buffers plus a per-slot
     ``pos`` vector (B,) — each batch row's absolute decode position.  The
     position travels WITH the cache so hot-loaded decode programs need no
     host-fed position argument and rows can sit at diverging positions
     (continuous batching)."""
     unit, n_groups, tail = split_layers(cfg)
-    group = {f"slot{i}": layer_cache_abstract(cfg, k, batch, cache_len)
+    group = {f"slot{i}": layer_cache_abstract(cfg, k, batch, cache_len,
+                                              ring=ring)
              for i, k in enumerate(unit)}
     return {
         "pos": LogicalArray((batch,), jnp.int32, ("batch",)),
         "groups": _stack_abstract(group, n_groups),
-        "tail": {f"tail{i}": layer_cache_abstract(cfg, k, batch, cache_len)
+        "tail": {f"tail{i}": layer_cache_abstract(cfg, k, batch, cache_len,
+                                                  ring=ring)
                  for i, k in enumerate(tail)},
     }
+
+
+def abstract_paged_cache(cfg, batch: int, cache_len: int, *, kv_block: int,
+                         arena_blocks: int) -> Params:
+    """Paged decode-state tree (repro.core.paging).
+
+    Attention layers trade the per-slot (B, C, ...) buffer for a shared
+    physical-block **arena** (arena_blocks, kv_block, heads, head_dim)
+    addressed through a per-slot ``block_table`` (B, cache_len/kv_block)
+    carried next to ``pos`` (-1 = unmapped).  Recurrent layers (SSM /
+    RG-LRU) keep their O(1)-size per-slot state dense.  Windowed ("L")
+    layers store the full logical length (no ring) — window masking happens
+    at attention time, so the arena layout is uniform across layer kinds.
+    """
+    assert cache_len % kv_block == 0, (cache_len, kv_block)
+    unit, n_groups, tail = split_layers(cfg)
+    hd = cfg.resolved_head_dim
+
+    def layer_c(kind):
+        if kind in ATTN_KINDS:
+            shp = (arena_blocks, kv_block, _cache_heads(cfg), hd)
+            la = (None, None, "kv_heads", None)
+            return {"k": LogicalArray(shp, cfg.dtype, la),
+                    "v": LogicalArray(shp, cfg.dtype, la)}
+        return layer_cache_abstract(cfg, kind, batch, cache_len)
+
+    group = {f"slot{i}": layer_c(k) for i, k in enumerate(unit)}
+    return {
+        "pos": LogicalArray((batch,), jnp.int32, ("batch",)),
+        "block_table": LogicalArray((batch, cache_len // kv_block),
+                                    jnp.int32, ("batch", None)),
+        "groups": _stack_abstract(group, n_groups),
+        "tail": {f"tail{i}": layer_c(k) for i, k in enumerate(tail)},
+    }
+
+
+def paged_block_bytes(cfg, kv_block: int) -> int:
+    """Bytes one KV block occupies across every attention layer (k + v) —
+    the page-size unit of the arena's byte-capacity accounting."""
+    n_attn = sum(1 for k in cfg.pattern_for_layers() if k in ATTN_KINDS)
+    itemsize = jnp.zeros((), cfg.dtype).dtype.itemsize
+    return 2 * n_attn * kv_block * _cache_heads(cfg) * \
+        cfg.resolved_head_dim * itemsize
 
 
 def init_params(cfg, key) -> Params:
@@ -352,10 +424,23 @@ def init_params(cfg, key) -> Params:
     return materialize(abstract_params(cfg), key)
 
 
-def init_cache(cfg, batch: int, cache_len: int) -> Params:
+def init_cache(cfg, batch: int, cache_len: int, ring: bool = True) -> Params:
     return jax.tree.map(
-        lambda la: jnp.zeros(la.shape, la.dtype), abstract_cache(cfg, batch, cache_len),
+        lambda la: jnp.zeros(la.shape, la.dtype),
+        abstract_cache(cfg, batch, cache_len, ring=ring),
         is_leaf=lambda x: isinstance(x, LogicalArray))
+
+
+def init_paged_cache(cfg, batch: int, cache_len: int, *, kv_block: int,
+                     arena_blocks: int) -> Params:
+    tree = jax.tree.map(
+        lambda la: jnp.zeros(la.shape, la.dtype),
+        abstract_paged_cache(cfg, batch, cache_len, kv_block=kv_block,
+                             arena_blocks=arena_blocks),
+        is_leaf=lambda x: isinstance(x, LogicalArray))
+    tree["block_table"] = jnp.full((batch, cache_len // kv_block), -1,
+                                   jnp.int32)
+    return tree
 
 
 # ---------------------------------------------------------------------------
@@ -372,7 +457,7 @@ def _maybe_remat(cfg, fn, mode):
     return jax.checkpoint(fn, policy=pol)
 
 
-def _run_stack(cfg, params, x, *, rules, mode, caches, pos):
+def _run_stack(cfg, params, x, *, rules, mode, caches, pos, block_table=None):
     unit, n_groups, tail = split_layers(cfg)
     aux0 = jnp.zeros((), jnp.float32)
 
@@ -387,7 +472,8 @@ def _run_stack(cfg, params, x, *, rules, mode, caches, pos):
             slot = f"slot{i}"
             x, nc, a = apply_layer(
                 cfg, kind, gp[slot], x, rules=rules, mode=mode,
-                cache=None if gc is None else gc[slot], pos=pos)
+                cache=None if gc is None else gc[slot], pos=pos,
+                block_table=block_table)
             new_gc[slot] = nc
             aux = aux + a
         x = constrain(x, ("batch", "seq", "embed"), rules)
@@ -408,7 +494,8 @@ def _run_stack(cfg, params, x, *, rules, mode, caches, pos):
         name = f"tail{i}"
         x, nc, a = apply_layer(
             cfg, kind, params["tail"][name], x, rules=rules, mode=mode,
-            cache=None if caches is None else caches["tail"][name], pos=pos)
+            cache=None if caches is None else caches["tail"][name], pos=pos,
+            block_table=block_table)
         new_tail[name] = nc
         aux = aux + a
 
@@ -470,11 +557,20 @@ def decode_step(cfg, params, caches, token, pos=None, *, rules):
     if pos is None:
         pos = caches["pos"]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    block_table = caches.get("block_table")
     x = apply_embedding(params["embed"], token, rules)
     if cfg.scale_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x, new_caches, _ = _run_stack(cfg, params, x, rules=rules, mode="decode",
-                                  caches=caches, pos=pos)
+                                  caches=caches, pos=pos,
+                                  block_table=block_table)
     logits = logits_from_hidden(cfg, params, x, rules)
-    new_caches["pos"] = pos + 1
+    if block_table is not None:
+        # paged tree: the block table rides along unchanged, and only
+        # mapped slots advance — an unmapped (released) slot's pos stays
+        # frozen so its block index can never creep out of range
+        new_caches["block_table"] = block_table
+        new_caches["pos"] = jnp.where(block_table[:, 0] >= 0, pos + 1, pos)
+    else:
+        new_caches["pos"] = pos + 1
     return logits, new_caches

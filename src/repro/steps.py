@@ -211,6 +211,63 @@ def make_prefill_slot_step(cfg, rules, cache_len: int):
     return prefill_slot
 
 
+def make_paged_prefill_slot_step(cfg, rules, cache_len: int, kv_block: int):
+    """Paged-arena admission program (repro.core.paging).
+
+    Same contract as :func:`make_prefill_slot_step`, but the live cache
+    tree carries a physical-block KV arena + per-slot block table instead
+    of dense per-slot buffers: the fresh batch-1 prefill cache is computed
+    exactly as in the dense path (so admission stays token-exact), then its
+    attention rows are scattered — block by block — into the arena blocks
+    the host-side pager mapped for this slot, while recurrent state rows
+    scatter into the slot as before.  Unmapped table entries (-1, beyond
+    the request's reservation) are dropped.
+    """
+    assert not cfg.is_encdec, "decoder-only serving path"
+    n_blocks = cache_len // kv_block
+
+    def _is_kv(path):
+        return getattr(path[-1], "key", None) in ("k", "v")
+
+    def prefill_slot(params, caches, tokens, slot, length):
+        # ring=False: windowed layers prefill a full-length buffer so
+        # logical block j holds positions [j*bs, (j+1)*bs) for every kind
+        fresh = transformer.init_cache(cfg, 1, cache_len, ring=False)
+        logits, c1, _ = transformer.forward(
+            cfg, params, tokens, rules=rules, mode="prefill", caches=fresh,
+            lengths=jnp.reshape(length, (1,)))
+        row = caches["block_table"][slot]                     # (n_blocks,)
+
+        def scatter_group(path, cb, c1l):
+            if _is_kv(path):
+                dest = jnp.where(row >= 0, row, cb.shape[1])
+                blocks = c1l[:, 0].reshape(
+                    c1l.shape[0], n_blocks, kv_block, *c1l.shape[3:])
+                return cb.at[:, dest].set(blocks.astype(cb.dtype),
+                                          mode="drop")
+            return cb.at[:, slot].set(c1l[:, 0].astype(cb.dtype))
+
+        def scatter_tail(path, cb, c1l):
+            if _is_kv(path):
+                dest = jnp.where(row >= 0, row, cb.shape[0])
+                blocks = c1l[0].reshape(n_blocks, kv_block, *c1l.shape[2:])
+                return cb.at[dest].set(blocks.astype(cb.dtype), mode="drop")
+            return cb.at[slot].set(c1l[0].astype(cb.dtype))
+
+        new_caches = {
+            "pos": caches["pos"].at[slot].set(c1["pos"][0]),
+            "block_table": caches["block_table"],
+            "groups": jax.tree_util.tree_map_with_path(
+                scatter_group, caches["groups"], c1["groups"]),
+            "tail": jax.tree_util.tree_map_with_path(
+                scatter_tail, caches["tail"], c1["tail"]),
+        }
+        last = jnp.take(logits[0], length - 1, axis=0)
+        return new_caches, last
+
+    return prefill_slot
+
+
 def make_serve_step(cfg, rules):
     """serve_step(params, caches, token) -> (caches, next_token, logits).
 
@@ -275,6 +332,42 @@ def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
         "prefill_slot": ProgramSpec(
             key="prefill_slot",
             fn=make_prefill_slot_step(cfg, rules, max_len),
+            abstract_args=(p_abstract, c_abstract, tok_slot, scalar, scalar),
+            donate_argnums=(1,), context=context),
+        "decode": ProgramSpec(
+            key="decode", fn=make_serve_step(cfg, rules),
+            abstract_args=(p_abstract, c_abstract, tok_decode),
+            donate_argnums=(1,), context=context),
+    }
+
+
+def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
+                              prefill_len: int, kv_block: int,
+                              arena_blocks: int):
+    """The paged serving engine's two programs as typed ProgramSpecs.
+
+    ``prefill_slot`` admits one request into the arena blocks its slot's
+    block-table row maps; ``decode`` advances every mapped slot one greedy
+    token through block-table-indexed cache reads/writes.  Both are pure
+    array programs (the pager moves blocks host<->device only between
+    executions), so they serialize into a :class:`ProgramStore` and warm-
+    boot by deserialization exactly like the dense programs.
+    """
+    from repro.core.program_store import ProgramSpec
+    from repro.sharding import LogicalArray
+    assert not cfg.is_encdec, "decoder-only serving path"
+    p_abstract = transformer.abstract_params(cfg)
+    c_abstract = transformer.abstract_paged_cache(
+        cfg, batch, max_len, kv_block=kv_block, arena_blocks=arena_blocks)
+    tok_slot = LogicalArray((1, prefill_len), jnp.int32, ("batch", "seq"))
+    tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
+    scalar = LogicalArray((), jnp.int32, ())
+    context = _spec_context(cfg, rules, batch, max_len, prefill_len,
+                            "paged", kv_block, arena_blocks)
+    return {
+        "prefill_slot": ProgramSpec(
+            key="prefill_slot",
+            fn=make_paged_prefill_slot_step(cfg, rules, max_len, kv_block),
             abstract_args=(p_abstract, c_abstract, tok_slot, scalar, scalar),
             donate_argnums=(1,), context=context),
         "decode": ProgramSpec(

@@ -251,6 +251,85 @@ else:
                 cap=int(rng.integers(120, 401)))
 
 
+N_PROP_PAGES = 8
+
+
+def _dc_lru_property(cap_pages, ops):
+    """Drive a DC table with a random call/pin/unpin/reset workload against
+    a mirror model and assert, at every step:
+
+      * arena byte capacity is never exceeded;
+      * a pinned page is never evicted (LRU or reset);
+      * every LRU eviction picks the least-recently-used evictable page
+        (checked against the mirror's recency list via on_evict);
+      * reset() invalidates exactly the non-pinned resident pages, firing
+        the writeback hook for each (lossless for stateful arenas).
+
+    ``ops``: (op, page) pairs with op 0=call, 1=pin, 2=unpin, 3=reset.
+    """
+    size = 10
+    recency = []                       # resident pages, LRU first (mirror)
+    pinned = set()
+    in_reset = [False]
+    evicted_log = []
+
+    def on_evict(e):
+        assert not e.pinned, "evicted a pinned page"
+        if not in_reset[0]:            # LRU pressure must pick the LRU page
+            expect = next(n for n in recency if n not in pinned)
+            assert e.name == expect, (e.name, expect, recency, pinned)
+        evicted_log.append(e.name)
+        recency.remove(e.name)
+
+    t = DynamicCallTable(cap_pages * size, on_evict=on_evict)
+    for i in range(N_PROP_PAGES):
+        t.register(f"p{i}", _page_loader(i, size), size)
+
+    for op, i in ops:
+        name = f"p{i % N_PROP_PAGES}"
+        if op == 0:
+            t.call(name)
+            if name in recency:
+                recency.remove(name)
+            recency.append(name)
+        elif op == 1:
+            # never pin the whole arena (a full-of-pinned arena is the
+            # documented MemoryError, tested separately)
+            if len(pinned) < cap_pages - 1:
+                t.pin(name)
+                pinned.add(name)
+        elif op == 2:
+            t.unpin(name)
+            pinned.discard(name)
+        else:
+            in_reset[0] = True
+            t.reset()                  # writes back every non-pinned page
+            in_reset[0] = False
+            assert all(n in pinned for n in recency)
+        assert t.resident_bytes <= t.capacity
+        assert set(t.resident()) == set(recency)
+        assert t.resident_bytes == len(recency) * size
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(cap_pages=st.integers(1, 5),
+           ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 11)),
+                        min_size=1, max_size=80))
+    def test_dc_lru_pin_reset_invariants(cap_pages, ops):
+        _dc_lru_property(cap_pages, ops)
+else:
+    def test_dc_lru_pin_reset_invariants():
+        """Fixed-vector fallback when hypothesis is unavailable."""
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            n = int(rng.integers(1, 81))
+            _dc_lru_property(
+                cap_pages=int(rng.integers(1, 6)),
+                ops=list(zip(rng.integers(0, 4, size=n),
+                             rng.integers(0, 12, size=n))))
+
+
 # ---------------------------------------------------------------------------
 # C5: hostcall + uva
 # ---------------------------------------------------------------------------

@@ -82,10 +82,21 @@ def test_arch_smoke_forward_shapes(arch, rng):
 
 @pytest.mark.parametrize("arch", registry.ARCH_IDS)
 def test_arch_grad_accum_equivalence(arch, rng):
-    """accum=2 must produce the same update as accum=1 (mean of grads)."""
+    """accum=2 must produce the same update as accum=1 (mean of grads).
+
+    MoE runs in a drop-free configuration: with the default capacity
+    factor the GShard-style capacity drops depend on the microbatch split
+    (token-order priority), so exact equivalence is not a property of the
+    lossy router.  Raising capacity to hold every token per expert and
+    disabling the aux loss (a batch-level statistic, not microbatch-
+    decomposable) makes the MoE forward a pure per-token function, for
+    which accumulation equivalence must hold like any dense arch.
+    """
     cfg = registry.get_config(arch, reduced=True)
     if cfg.n_experts:
-        pytest.skip("MoE capacity drops differ per microbatch split")
+        cfg = cfg.replace(
+            capacity_factor=cfg.n_experts / cfg.experts_per_token + 1.0,
+            router_aux_coef=0.0)
     mod = steps.model_module(cfg)
     params = mod.init_params(cfg, jax.random.PRNGKey(0))
     batch = _batch_for(cfg, 4, 16, rng)

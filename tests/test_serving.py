@@ -72,9 +72,18 @@ def test_per_slot_positions_diverge_midflight():
     assert seen_divergent, "slots never decoded at diverging positions"
 
 
-@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-4b", "mamba2-130m"])
+# the cross-family exactness matrix: one reduced config per model family —
+# dense, sliding-window (ring cache), SSM, hybrid (RG-LRU + local attn),
+# and MoE.  Every family must hold the engine's core invariant: a request
+# admitted into a live batch between decode steps generates the same
+# tokens as a batch-of-1 decode of its prompt.
+FAMILY_ARCHS = ["qwen3-0.6b", "gemma3-4b", "mamba2-130m",
+                "recurrentgemma-2b", "olmoe-1b-7b"]
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
 def test_generated_tokens_match_batch1_reference(arch):
-    """Exactness across families: dense, windowed (ring cache), SSM."""
+    """Refill/decode exactness across all five decoder-only families."""
     eng, reqs = _staggered_engine(arch=arch)
     eng.run()
     for r in reqs:
