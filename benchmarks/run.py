@@ -24,11 +24,12 @@ def main() -> None:
 
     from benchmarks import (bench_boot, bench_hostcall, bench_load_exec,
                             bench_paging, bench_pipeline, bench_placement,
-                            bench_roofline, bench_treeload)
+                            bench_roofline, bench_spec, bench_treeload)
     modules = [
         ("load_exec(Table1+Fig2)", bench_load_exec),
         ("boot(Table1-store)", bench_boot),
         ("paging(S3.4-kv)", bench_paging),
+        ("spec(Table1-decode)", bench_spec),
         ("placement(Table2)", bench_placement),
         ("hostcall(S3.5)", bench_hostcall),
         ("treeload(Fig2)", bench_treeload),

@@ -131,6 +131,20 @@ class DynamicCallTable:
             self._resident_bytes -= e.size_bytes
             e.value = None
 
+    def resize(self, name: str, size_bytes: int):
+        """Adjust a RESIDENT page's size in place (speculative block
+        over-allocation grows a KV page for one verify step, reclaim
+        shrinks it back).  The caller guarantees the new total fits the
+        arena — growth must come from genuinely free capacity, never by
+        displacing another page."""
+        e = self._entries[name]
+        assert e.value is not None, f"resize of non-resident page '{name}'"
+        size_bytes = int(size_bytes)
+        self._resident_bytes += size_bytes - e.size_bytes
+        assert 0 <= self._resident_bytes <= self.capacity, \
+            (name, size_bytes, self._resident_bytes, self.capacity)
+        e.size_bytes = size_bytes
+
     def is_resident(self, name: str) -> bool:
         e = self._entries.get(name)
         return e is not None and e.value is not None

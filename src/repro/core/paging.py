@@ -44,7 +44,7 @@ def _top_key(path) -> str:
     return str(getattr(p, "key", getattr(p, "idx", p)))
 
 
-def _leaf_kind(path) -> str:
+def leaf_kind(path) -> str:
     """Classify a cache-tree leaf: 'kv' (block arena), 'state' (per-slot
     recurrent row), or 'meta' (pos / block_table)."""
     top = _top_key(path)
@@ -54,7 +54,7 @@ def _leaf_kind(path) -> str:
     return "kv" if last in ("k", "v") else "state"
 
 
-def _leaf_axis(path) -> int:
+def leaf_axis(path) -> int:
     """Index axis of a cache leaf: group-stacked leaves carry a leading
     (layers,) axis, so the arena/slot axis is 1; tail leaves use axis 0."""
     return 1 if _top_key(path) == "groups" else 0
@@ -74,6 +74,7 @@ class _Page:
     arena) or swapped out (host copies of blocks + recurrent rows)."""
     rid: int
     n_blocks: int
+    base_blocks: int = 0                    # admission-time reservation
     phys: Optional[List[int]] = None        # resident physical block ids
     host_blocks: Optional[List[np.ndarray]] = None   # swapped-out KV blocks
     state_rows: Optional[List[np.ndarray]] = None    # recurrent rows at preempt
@@ -106,6 +107,8 @@ class PagedKVManager:
         self.swap_outs = 0        # LRU writebacks to the host tier
         self.hits = 0             # table calls served by resident pages
         self.loads = 0            # table calls that ran the loader
+        self.grown_blocks = 0     # speculative over-allocations (grow)
+        self.reclaimed_blocks = 0  # speculative reclaims (trim_to_base)
         self._caches = None       # staged pytree during table ops
 
     # -- capacity ------------------------------------------------------------
@@ -133,7 +136,8 @@ class PagedKVManager:
         cache tree with the slot's block-table row written.  May evict
         (write back) idle pages to make room."""
         assert rid not in self.pages, rid
-        page = _Page(rid=rid, n_blocks=int(n_blocks))
+        page = _Page(rid=rid, n_blocks=int(n_blocks),
+                     base_blocks=int(n_blocks))
         self.pages[rid] = page
         name = self._name(rid)
         self.table.register(name, self._loader(rid),
@@ -149,6 +153,43 @@ class PagedKVManager:
         self.table.remove(self._name(rid))
         self._drop_host(page)
         return self._clear_row(caches, slot)
+
+    def grow(self, rid: int, n_total: int, slot: int, caches):
+        """Speculative block over-allocation: best-effort extend a resident
+        page's mapping toward ``n_total`` blocks from the FREE list only
+        (never by evicting another page — a failed grow just means
+        overshoot writes drop, which verify rollback tolerates).  Called
+        by the speculative engine right before a verify step so draft
+        writes past the base reservation land in mapped blocks."""
+        page = self.pages[rid]
+        assert page.phys is not None, f"grow of non-resident page {rid}"
+        extra = min(int(n_total) - page.n_blocks, len(self.free))
+        if extra <= 0:
+            return caches
+        page.phys.extend(self.free.pop() for _ in range(extra))
+        page.n_blocks += extra
+        self.grown_blocks += extra
+        self.table.resize(self._name(rid),
+                          page.n_blocks * self.block_bytes)
+        return self._write_row(caches, slot, page)
+
+    def trim_to_base(self, rid: int, slot: int, caches):
+        """Reclaim on rejection: shrink a grown page back to its
+        admission-time reservation, returning the speculative tail blocks
+        to the free list and unmapping them from the slot's row.  The
+        verify program restored their bytes before this runs, so the freed
+        blocks are bit-identical to never having been written."""
+        page = self.pages[rid]
+        extra = page.n_blocks - page.base_blocks
+        if extra <= 0 or page.phys is None:
+            return caches
+        self.free.extend(page.phys[page.base_blocks:])
+        del page.phys[page.base_blocks:]
+        page.n_blocks = page.base_blocks
+        self.reclaimed_blocks += extra
+        self.table.resize(self._name(rid),
+                          page.n_blocks * self.block_bytes)
+        return self._write_row(caches, slot, page)
 
     def reset(self, caches):
         """The paper's DC-table reset applied to the KV arena: every
@@ -170,9 +211,9 @@ class PagedKVManager:
         back (lazy swap-out, so a quick resume is free)."""
         page = self.pages[rid]
         page.state_rows = [
-            np.asarray(jnp.take(leaf, slot, axis=_leaf_axis(path)))
+            np.asarray(jnp.take(leaf, slot, axis=leaf_axis(path)))
             for path, leaf in _flatten(caches)
-            if _leaf_kind(path) == "state"]
+            if leaf_kind(path) == "state"]
         self.table.unpin(self._name(rid))
         return self._clear_row(caches, slot)
 
@@ -186,10 +227,10 @@ class PagedKVManager:
         rows = iter(page.state_rows)
 
         def restore(path, leaf):
-            if _leaf_kind(path) != "state":
+            if leaf_kind(path) != "state":
                 return leaf
             val = jnp.asarray(next(rows))
-            if _leaf_axis(path) == 1:
+            if leaf_axis(path) == 1:
                 return leaf.at[:, slot].set(val.astype(leaf.dtype))
             return leaf.at[slot].set(val.astype(leaf.dtype))
 
@@ -234,11 +275,11 @@ class PagedKVManager:
                 blocks = iter(page.host_blocks)
 
                 def scatter(path, leaf):
-                    if _leaf_kind(path) != "kv":
+                    if leaf_kind(path) != "kv":
                         return leaf
                     val = jnp.asarray(next(blocks)).astype(leaf.dtype)
                     idx = jnp.asarray(page.phys)
-                    if _leaf_axis(path) == 1:
+                    if leaf_axis(path) == 1:
                         return leaf.at[:, idx].set(val)
                     return leaf.at[idx].set(val)
 
@@ -257,9 +298,9 @@ class PagedKVManager:
         page = self.pages[rid]
         idx = jnp.asarray(page.phys)
         page.host_blocks = [
-            np.asarray(jnp.take(leaf, idx, axis=_leaf_axis(path)))
+            np.asarray(jnp.take(leaf, idx, axis=leaf_axis(path)))
             for path, leaf in _flatten(self._caches)
-            if _leaf_kind(path) == "kv"]
+            if leaf_kind(path) == "kv"]
         if self.uva is not None:
             for i, blk in enumerate(page.host_blocks):
                 self.uva.bind_host(f"kvpage:{rid}/{i}", blk)
@@ -290,5 +331,7 @@ class PagedKVManager:
             "evictions": t["evictions"],  # LRU writebacks
             "page_faults": self.page_faults,
             "swap_outs": self.swap_outs,
+            "grown_blocks": self.grown_blocks,        # speculative grows
+            "reclaimed_blocks": self.reclaimed_blocks,  # speculative trims
             "tiers": {USRCORE: t["resident_bytes"], USRMEM: host_bytes},
         }

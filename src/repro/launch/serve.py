@@ -41,6 +41,20 @@ arena pressure, preempted requests swap to a host-DRAM tier and swap back
 in on refill (a page fault if their blocks were evicted), and the total
 KV footprint the engine can serve is bounded by host memory, not device
 memory — token-exactly.
+
+Speculative decoding (v4): with ``spec_k=K`` each engine iteration
+proposes up to K draft tokens per slot from the request's own history
+(n-gram prompt lookup, ``repro.spec``) and scores them ALL in one
+execution of a fourth hot-loaded ``verify`` program — the Table-1
+re-execute arithmetic applied to the decode loop: up to K+1 decode
+dispatches collapse into one.  Verification accepts each row's longest
+greedy-matching prefix and rolls rejected state back in-program (KV
+``pos`` truncation + byte restore, paged block-table scatter restore,
+recurrent-state snapshot select), so the emitted stream is token-for-
+token IDENTICAL to the non-speculative engine no matter how wrong the
+drafts are.  In paged mode, speculative blocks are over-allocated before
+the verify call (``PagedKVManager.grow``) and reclaimed on rejection
+(``trim_to_base``).
 """
 from __future__ import annotations
 
@@ -59,6 +73,7 @@ from repro.core import ProgramStore, Syscore
 from repro.core.hostcall import CALL_METRIC, CALL_STEP_REPORT
 from repro.models import registry, transformer
 from repro.sharding import make_rules
+from repro.spec import NGramProposer
 
 # CALL_METRIC name codes used by the engine (schema documented in README)
 METRIC_TTFT_MS = 1        # time-to-first-token per request, ms
@@ -68,6 +83,7 @@ METRIC_OCCUPANCY = 3      # active slots / batch, per decode step
 METRIC_PAGE_FAULT = 6     # paged KV swap-in copied blocks from host (value
                           # = blocks moved), per fault
 METRIC_ARENA_OCCUPANCY = 7  # resident arena blocks / capacity, per decode step
+METRIC_SPEC_ACCEPT = 8    # accepted / proposed draft tokens, per verify step
 
 
 @dataclass
@@ -135,6 +151,19 @@ class ServingEngine:
         requests that have decoded ``timeslice`` tokens since their last
         (re)admission are preempted to make room.  ``None`` = cooperative
         only (callers may still ``preempt()`` explicitly).
+    spec_k: speculative decoding — per engine iteration, propose up to
+        ``spec_k`` draft tokens per slot from each request's own history
+        (n-gram prompt lookup, ``repro.spec``) and score them all in ONE
+        execution of a fourth hot-loaded ``verify`` program, which accepts
+        the longest greedy-matching prefix and rolls rejected state back
+        (KV ``pos`` truncation + recurrent-state snapshot select) so the
+        token stream stays IDENTICAL to non-speculative decode.  Amortizes
+        up to ``spec_k + 1`` decode dispatches per program call — the
+        paper's re-execute-vs-reload arithmetic applied to the decode
+        loop.  ``None`` (default) = plain one-token decode.  Windowed
+        layers switch to full-length (non-ring) cache buffers so rollback
+        can address rejected slots absolutely.
+    spec_ngram: suffix n-gram length the prompt-lookup proposer matches on.
     """
 
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
@@ -145,7 +174,8 @@ class ServingEngine:
                  store: Optional[ProgramStore] = None, store_dir=None,
                  paged: bool = False, kv_block: int = 8,
                  arena_blocks: Optional[int] = None,
-                 timeslice: Optional[int] = None):
+                 timeslice: Optional[int] = None,
+                 spec_k: Optional[int] = None, spec_ngram: int = 2):
         self.arch = arch
         self.reduced = reduced
         self.cfg = registry.get_config(arch, reduced=reduced)
@@ -176,6 +206,13 @@ class ServingEngine:
         self.paged = paged
         self.timeslice = timeslice
         self.pager = None
+        self.spec_k = spec_k
+        self.spec_ngram = spec_ngram
+        if spec_k is not None:
+            assert spec_k >= 1, spec_k
+            assert not group_prefill, \
+                "group_prefill rewrites every slot; incompatible with the " \
+                "speculative non-ring cache layout"
         if paged:
             assert not group_prefill, \
                 "group_prefill rewrites every slot; incompatible with paging"
@@ -187,16 +224,17 @@ class ServingEngine:
             specs = steps_lib.paged_serve_program_specs(
                 cfg, self.rules, batch=batch, max_len=max_len,
                 prefill_len=self.prefill_len, kv_block=kv_block,
-                arena_blocks=self.arena_blocks)
+                arena_blocks=self.arena_blocks, spec_k=spec_k)
         else:
             specs = steps_lib.serve_program_specs(
                 cfg, self.rules, batch=batch, max_len=max_len,
-                prefill_len=self.prefill_len)
+                prefill_len=self.prefill_len, spec_k=spec_k)
         self.programs = {name: self.syscore.hot_load(spec)
                          for name, spec in specs.items()}
         self._prefill = self.programs.get("prefill")
         self._prefill_slot = self.programs["prefill_slot"]
         self._decode = self.programs["decode"]
+        self._verify = self.programs.get("verify")
 
         if paged:
             from repro.core.paging import PagedKVManager
@@ -210,7 +248,12 @@ class ServingEngine:
                 on_fault=lambda blocks: self.syscore.hostcalls.dispatch(
                     CALL_METRIC, METRIC_PAGE_FAULT, float(blocks)))
         else:
-            self.caches = transformer.init_cache(cfg, batch, max_len)
+            self.caches = transformer.init_cache(cfg, batch, max_len,
+                                                 ring=spec_k is None)
+        self._proposers: Dict[int, NGramProposer] = {}
+        self.spec_steps = 0            # verify-program executions
+        self.draft_tokens = 0          # drafts proposed (engine lifetime)
+        self.accepted_drafts = 0       # drafts accepted (engine lifetime)
         self.preemptions = 0
         self.swap_ins = 0
         self.slots: List[Optional[Request]] = [None] * batch
@@ -255,6 +298,13 @@ class ServingEngine:
         """Post-prefill bookkeeping shared by both admission paths."""
         first = int(np.argmax(last_logits[: self.cfg.vocab_size]))
         req.generated.append(first)
+        if self.spec_k is not None:
+            # per-slot proposer state: one prompt-lookup index per request,
+            # created at first admission, fed as tokens append, surviving
+            # preempt/resume round trips (keyed by rid, not slot)
+            prop = self._proposers[req.rid] = NGramProposer(self.spec_ngram)
+            prop.observe(req.prompt.tolist())
+            prop.observe([first])
         req.t_first = time.perf_counter()
         req.slot = slot
         req.gen_at_admit = len(req.generated)
@@ -401,6 +451,7 @@ class ServingEngine:
         if len(req.generated) >= req.max_new or hit_eos or full:
             req.done = True
             req.t_done = time.perf_counter()
+            self._proposers.pop(req.rid, None)
             self.completed.append(req)
             if req.slot >= 0:
                 if self.paged:
@@ -436,17 +487,96 @@ class ServingEngine:
             if req is None:
                 continue
             req.generated.append(int(nt[i, 0]))
+            if self.spec_k is not None and req.rid in self._proposers:
+                self._proposers[req.rid].observe(req.generated[-1:])
             self._maybe_finish(req)
         return dt
 
+    def _verify_once(self):
+        """One speculative iteration: propose up to ``spec_k`` drafts per
+        active slot (prompt lookup over that request's own history), score
+        them ALL in one execution of the hot-loaded ``verify`` program,
+        and accept each row's longest greedy-matching prefix.  Rows whose
+        proposer has nothing to offer are padded with their last token —
+        the verify math keeps them exact either way (an accepted token is
+        always the model's own greedy token).  Falls back to the plain
+        ``decode`` program when no slot has a proposal at all."""
+        k = self.spec_k
+        tokens = np.zeros((self.batch, k + 1), np.int32)
+        n_props = np.zeros((self.batch,), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tokens[i, :] = req.generated[-1]
+            props = self._proposers[req.rid].propose(k)
+            n_props[i] = len(props)
+            tokens[i, 1:1 + len(props)] = props
+        drafted = int(n_props.sum())
+        if drafted == 0:
+            self._decode_once()
+            return
+        active = sum(s is not None for s in self.slots)
+        if self.paged:
+            # speculative block over-allocation: map enough blocks that
+            # draft writes past the base reservation land somewhere real
+            # (best-effort, from the free list; a failed grow just drops
+            # the overshoot writes)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                pos0 = req.prompt_len + len(req.generated) - 1
+                need = min(-(-(pos0 + k + 1) // self.kv_block),
+                           self.blocks_per_slot)
+                self.caches = self.pager.grow(req.rid, need, i, self.caches)
+        t1 = time.perf_counter()
+        self.caches, ys, n_new = self._verify(
+            self.params, self.caches, jnp.asarray(tokens))
+        ys = np.asarray(ys)
+        n_new = np.asarray(n_new)          # blocks on the device result
+        dt = time.perf_counter() - t1
+        self.decode_steps += 1
+        self.spec_steps += 1
+        accepted = 0
+        for i, req in enumerate(list(self.slots)):
+            if req is None:
+                continue
+            used = 0
+            for j in range(int(n_new[i])):
+                if req.done:
+                    break                  # EOS / budget hit mid-accept
+                req.generated.append(int(ys[i, j]))
+                used += 1
+                self._maybe_finish(req)
+            accepted += min(used - 1, int(n_props[i]))
+            if req.rid in self._proposers:
+                self._proposers[req.rid].observe(req.generated[-used:])
+            if self.paged and req.rid in self.pager.pages and req.slot >= 0:
+                # reclaim on rejection: speculative tail blocks go back to
+                # the free list (verify restored their bytes in-program)
+                self.caches = self.pager.trim_to_base(req.rid, i, self.caches)
+        self.draft_tokens += drafted
+        self.accepted_drafts += accepted
+        hc = self.syscore.hostcalls
+        hc.dispatch(CALL_METRIC, METRIC_DECODE_MS, 1e3 * dt)
+        hc.dispatch(CALL_METRIC, METRIC_OCCUPANCY, active / self.batch)
+        hc.dispatch(CALL_METRIC, METRIC_SPEC_ACCEPT, accepted / drafted)
+        if self.paged:
+            hc.dispatch(CALL_METRIC, METRIC_ARENA_OCCUPANCY,
+                        self.pager.arena_occupancy())
+        hc.dispatch(CALL_STEP_REPORT, self.decode_steps, dt)
+
     def step(self) -> bool:
-        """One engine iteration: admit into free slots, then one decode step
-        for every active slot.  Returns False when no work remains."""
+        """One engine iteration: admit into free slots, then one decode (or
+        speculative verify) step for every active slot.  Returns False
+        when no work remains."""
         if not (self.queue or any(s is not None for s in self.slots)):
             return False
         self._admit()
         if any(s is not None for s in self.slots):
-            self._decode_once()
+            if self.spec_k is not None:
+                self._verify_once()
+            else:
+                self._decode_once()
         elif self.clock == "wall" and self.queue:
             # idle: sleep toward the earliest future arrival (capped so a
             # far-future request costs O(wait/10ms) engine ticks, not a
@@ -468,6 +598,8 @@ class ServingEngine:
         dec_steps0 = self.decode_steps
         adm0, ref0 = self.admitted, self.refill_admissions
         pre0, swi0 = self.preemptions, self.swap_ins
+        spec0, drf0, acc0 = (self.spec_steps, self.draft_tokens,
+                             self.accepted_drafts)
         pf0 = self.pager.page_faults if self.paged else 0
         swo0 = self.pager.swap_outs if self.paged else 0
         t0 = time.perf_counter()
@@ -495,6 +627,15 @@ class ServingEngine:
             "rejected": self.rejected,
             "refill_admissions": self.refill_admissions - ref0,
         }
+        if self.spec_k is not None:
+            drafted = self.draft_tokens - drf0
+            accepted = self.accepted_drafts - acc0
+            stats.update({
+                "spec_steps": self.spec_steps - spec0,
+                "draft_tokens": drafted,
+                "accepted_drafts": accepted,
+                "accept_rate": accepted / max(drafted, 1),
+            })
         if self.paged:
             arena = metrics.get(METRIC_ARENA_OCCUPANCY, [])[n_dec0:]
             stats.update({
@@ -514,7 +655,8 @@ class ServingEngine:
         done, self.completed = self.completed, []
         hc = self.syscore.hostcalls
         for code in (METRIC_TTFT_MS, METRIC_DECODE_MS, METRIC_OCCUPANCY,
-                     METRIC_PAGE_FAULT, METRIC_ARENA_OCCUPANCY):
+                     METRIC_PAGE_FAULT, METRIC_ARENA_OCCUPANCY,
+                     METRIC_SPEC_ACCEPT):
             if code in hc.metrics:
                 hc.metrics[code].clear()
         hc.step_times.clear()
@@ -555,11 +697,17 @@ def main():
     ap.add_argument("--arena-blocks", type=int, default=None,
                     help="device-resident KV blocks; below "
                          "batch*max_len/kv_block creates memory pressure")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative decoding: drafts per verify step "
+                         "(n-gram prompt lookup); None = plain decode")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="suffix n-gram length the proposer matches on")
     args = ap.parse_args()
     eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
                         store_dir=args.store_dir, paged=args.paged,
                         kv_block=args.kv_block,
-                        arena_blocks=args.arena_blocks)
+                        arena_blocks=args.arena_blocks,
+                        spec_k=args.spec_k, spec_ngram=args.spec_ngram)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8), args.max_new)

@@ -199,16 +199,44 @@ def write_paged_kv(arena: jax.Array, block_table: jax.Array, pos: jax.Array,
 
     Row b's value (B, H, D) lands in physical block
     ``block_table[b, pos[b] // bs]`` at offset ``pos[b] % bs``.  Rows whose
-    block is unmapped (released slots, table entry -1) are dropped — their
-    physical destination is pushed out of range and ``mode='drop'`` elides
-    the scatter, so an idle slot can never corrupt a live request's block.
+    block is unmapped (released slots, table entry -1) are dropped, as are
+    rows whose position lies beyond the table entirely (speculative
+    overshoot past the reservation) — their physical destination is pushed
+    out of range and ``mode='drop'`` elides the scatter, so an idle slot or
+    a rejected draft can never corrupt a live request's block.
     """
     p, bs = arena.shape[0], arena.shape[1]
     m = block_table.shape[1]
-    blk = jnp.clip(pos // bs, 0, m - 1)
-    phys = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
-    dest = jnp.where(phys >= 0, phys, p)
+    blk = pos // bs
+    phys = jnp.take_along_axis(block_table, jnp.clip(blk, 0, m - 1)[:, None],
+                               axis=1)[:, 0]
+    dest = jnp.where((phys >= 0) & (blk < m), phys, p)
     return arena.at[dest, pos % bs].set(val.astype(arena.dtype), mode="drop")
+
+
+def rollback_paged_kv(arena: jax.Array, orig: jax.Array,
+                      block_table: jax.Array, pos_cand: jax.Array,
+                      reject: jax.Array) -> jax.Array:
+    """Undo rejected speculative writes in a paged arena, byte-exactly.
+
+    A verify step writes KV for every candidate position before knowing
+    which drafts the target model accepts; rolling the arena back to the
+    pre-verify bytes at the rejected positions makes the post-verify cache
+    identical to having decoded only the accepted tokens one at a time.
+
+    arena: (P, bs, H, D) post-verify; orig: same shape, pre-verify;
+    pos_cand: (B, S) absolute position of each candidate write;
+    reject: (B, S) bool, True where the write must be undone.  Unmapped or
+    out-of-table positions were dropped by :func:`write_paged_kv` and are
+    dropped here symmetrically.
+    """
+    p, bs = arena.shape[0], arena.shape[1]
+    m = block_table.shape[1]
+    blk = pos_cand // bs
+    phys = jnp.take_along_axis(block_table, jnp.clip(blk, 0, m - 1), axis=1)
+    dest = jnp.where(reject & (phys >= 0) & (blk < m), phys, p)
+    vals = orig[jnp.clip(phys, 0), pos_cand % bs]          # (B, S, H, D)
+    return arena.at[dest, pos_cand % bs].set(vals, mode="drop")
 
 
 def decode_attention_gqa(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

@@ -214,14 +214,20 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind,
             out = constrain(out, ("batch", "seq", "embed"), rules)
             return residual + out, {"k": k_arena, "v": v_arena}
         c = cache["k"].shape[1]
+        ring = bool(window) and c == window
         slot = (pos_b % c).astype(jnp.int32)
         # per-row write as an elementwise one-hot select: a scatter with
         # per-batch indices forces GSPMD into an involuntary full-remat of
         # the cache, while where() keeps the cache's sharding untouched
-        hit = (jnp.arange(c)[None, :] == slot[:, None])[:, :, None, None]
+        hit = jnp.arange(c)[None, :] == slot[:, None]
+        if not ring:
+            # non-ring buffers address slots absolutely: a position past the
+            # buffer (an idle slot left ticking, or speculative overshoot
+            # past a request's horizon) must drop, not wrap-corrupt slot 0
+            hit &= (pos_b < c)[:, None]
+        hit = hit[:, :, None, None]
         k_cache = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
         v_cache = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
-        ring = bool(window) and c == window
         # sharding for the (huge) cache: heads when they divide TP cleanly,
         # else head_dim.  The head_dim path uses grouped-GQA math (no repeat
         # buffer, no resharding of the cache; costs one scores psum per
@@ -544,6 +550,105 @@ def forward(cfg, params, tokens, *, rules, prefix_embeds=None, mode="train",
     if new_caches is not None:
         new_caches["pos"] = pos
     return logits, new_caches, aux
+
+
+def verify_decode(cfg, params, caches, tokens, *, rules):
+    """Speculative verify: score S = k+1 tokens in ONE program, accept the
+    longest greedy-matching draft prefix, roll rejected state back.
+
+    tokens: (B, S) int32 — per row, the last accepted token followed by k
+    draft tokens.  Returns ``(new_caches, out_tokens (B, S), n_new (B,))``:
+    row b's accepted continuation is ``out_tokens[b, :n_new[b]]`` and its
+    cache holds exactly the state of having decoded those tokens one at a
+    time (``pos`` advanced by ``n_new``).
+
+    Exactness by construction: the forward is a ``lax.scan`` of the SAME
+    per-token :func:`decode_step` the non-speculative engine dispatches, so
+    every candidate's logits are bit-identical to sequential decode —
+    acceptance reproduces the sequential greedy stream exactly, never just
+    approximately.  The scan amortizes S decode steps into one dispatch
+    (the paper's re-execute-vs-reload lesson applied to the decode loop).
+
+    Rollback, per cache representation:
+      * attention KV (dense or windowed non-ring): rejected positions sit
+        at slots >= the rolled-back ``pos``; their bytes are restored from
+        the pre-verify buffer so the tree is byte-identical to sequential
+        decode (ring layouts are excluded — a rejected ring write lands on
+        a slot still inside the window; the speculative engine therefore
+        runs ``ring=False`` buffers);
+      * paged KV: rejected writes are scatter-restored through the block
+        table (:func:`repro.models.attention.rollback_paged_kv`);
+      * recurrent state (SSM/RG-LRU): the scan snapshots each step's
+        per-slot state and the accepted step's snapshot is selected per
+        row — restoring the exact pre-rejection recurrence.
+    """
+    # the cache-tree leaf taxonomy (kv / state / meta, batch axis) is owned
+    # by the pager, which walks the same trees host-side
+    from repro.core.paging import leaf_axis, leaf_kind
+    from repro.models import attention as attn_mod
+    b, s = tokens.shape
+    pos0 = caches["pos"]
+    block_table = caches.get("block_table")
+    orig = caches
+
+    def body(c, tok):
+        logits, c2 = decode_step(cfg, params, c, tok[:, None], rules=rules)
+        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+        y = jnp.argmax(jnp.where(valid, logits[:, 0], -jnp.inf),
+                       axis=-1).astype(jnp.int32)
+        rec = [leaf for path, leaf in
+               jax.tree_util.tree_flatten_with_path(c2)[0]
+               if leaf_kind(path) == "state"]
+        return c2, (y, rec)
+
+    final, (ys, recs) = jax.lax.scan(body, caches, jnp.transpose(tokens))
+    ys = jnp.transpose(ys)                                     # (B, S)
+    # leading greedy matches: draft i+1 accepted iff it equals the model's
+    # prediction at input i; +1 for the model's own (always-kept) token
+    match = (tokens[:, 1:] == ys[:, :-1]).astype(jnp.int32)
+    n_new = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)    # (B,)
+    pos_new = pos0 + n_new
+
+    rec_stacked = iter(recs)
+    if block_table is not None:
+        pos_cand = pos0[:, None] + jnp.arange(s)[None, :]      # (B, S)
+        reject = jnp.arange(s)[None, :] >= n_new[:, None]
+
+    def fix(path, leaf, old):
+        kind = leaf_kind(path)
+        if kind == "state":
+            # stacked: (S, ...) with batch at leaf_axis + 1; pick, per
+            # row, the state after its last accepted input (step n_new-1)
+            stacked = next(rec_stacked)
+            shape = [1] * stacked.ndim
+            shape[leaf_axis(path) + 1] = b
+            idx = jnp.broadcast_to((n_new - 1).reshape(shape),
+                                   (1,) + stacked.shape[1:])
+            return jnp.take_along_axis(stacked, idx, axis=0)[0]
+        if kind == "kv":
+            if block_table is not None:
+                if leaf_axis(path) == 1:        # leading (layers,) axis
+                    return jax.vmap(
+                        attn_mod.rollback_paged_kv,
+                        in_axes=(0, 0, None, None, None))(
+                        leaf, old, block_table, pos_cand, reject)
+                return attn_mod.rollback_paged_kv(leaf, old, block_table,
+                                                  pos_cand, reject)
+            ba = leaf_axis(path)
+            c = leaf.shape[ba + 1]
+            keep = jnp.arange(c)[None, :] < pos_new[:, None]   # (B, C)
+            shape = [1] * leaf.ndim
+            shape[ba], shape[ba + 1] = b, c
+            return jnp.where(keep.reshape(shape), leaf, old)
+        return leaf
+
+    new_caches = jax.tree_util.tree_map_with_path(fix, final, orig)
+    if block_table is not None:
+        # only mapped slots advance, mirroring the sequential paged decode
+        new_caches["pos"] = jnp.where(block_table[:, 0] >= 0, pos_new, pos0)
+    else:
+        new_caches["pos"] = pos_new
+    return new_caches, ys, n_new
 
 
 def decode_step(cfg, params, caches, token, pos=None, *, rules):

@@ -174,7 +174,7 @@ def make_prefill_step(cfg, rules):
     return prefill_step
 
 
-def make_prefill_slot_step(cfg, rules, cache_len: int):
+def make_prefill_slot_step(cfg, rules, cache_len: int, ring: bool = True):
     """prefill_slot(params, caches, tokens, slot, length) -> (caches, last).
 
     Admission path of the continuous-batching engine: prefill ONE request
@@ -185,11 +185,14 @@ def make_prefill_slot_step(cfg, rules, cache_len: int):
     between executions of this program; hot-loading it once means admission
     never recompiles.  ``last`` is the (V,) logits at the final valid
     prompt position (the first generated token's distribution).
+
+    ``ring=False`` matches the full-length windowed-layer buffers of the
+    speculative engine (rollback needs absolute slot addressing).
     """
     assert not cfg.is_encdec, "decoder-only serving path"
 
     def prefill_slot(params, caches, tokens, slot, length):
-        fresh = transformer.init_cache(cfg, 1, cache_len)
+        fresh = transformer.init_cache(cfg, 1, cache_len, ring=ring)
         logits, c1, _ = transformer.forward(
             cfg, params, tokens, rules=rules, mode="prefill", caches=fresh,
             lengths=jnp.reshape(length, (1,)))
@@ -290,6 +293,26 @@ def make_serve_step(cfg, rules):
     return serve_step_encdec if cfg.is_encdec else serve_step
 
 
+def make_verify_step(cfg, rules):
+    """verify_step(params, caches, tokens (B, k+1)) ->
+    (caches, out_tokens (B, k+1), n_new (B,)).
+
+    The speculative-decoding hot path: ONE program execution scores the
+    last accepted token plus k drafts, accepts the longest greedy-matching
+    prefix, and returns the cache rolled back to exactly the accepted
+    state (:func:`repro.models.transformer.verify_decode`).  Pure array
+    ops only, so it serializes into a ProgramStore and warm-boots by
+    deserialization like the other serving programs.
+    """
+    assert not cfg.is_encdec, "decoder-only serving path"
+
+    def verify_step(params, caches, tokens):
+        return transformer.verify_decode(cfg, params, caches, tokens,
+                                         rules=rules)
+
+    return verify_step
+
+
 def _spec_context(cfg, rules, *extra) -> str:
     """Fingerprint context for closure-captured configuration: the frozen
     config dataclass repr, the sharding rules and any extra scalars."""
@@ -298,19 +321,25 @@ def _spec_context(cfg, rules, *extra) -> str:
 
 
 def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
-                        prefill_len: int):
-    """The serving engine's three programs as typed ProgramSpecs.
+                        prefill_len: int, spec_k: Optional[int] = None):
+    """The serving engine's programs as typed ProgramSpecs.
 
     ``prefill`` admits a cold-start burst over the whole batch,
     ``prefill_slot`` admits ONE request into a live batch, ``decode``
-    advances every slot one greedy token.  All three donate the cache
-    tree (argnum 1).
+    advances every slot one greedy token.  With ``spec_k`` a fourth
+    ``verify`` program scores ``spec_k`` draft tokens per slot in one
+    execution (speculative decoding) — and the cache layout switches to
+    full-length (``ring=False``) windowed buffers, because verify rollback
+    needs rejected writes to land at absolute slots beyond the truncated
+    ``pos``, never inside a live ring window.  All programs donate the
+    cache tree (argnum 1).
     """
     from repro.core.program_store import ProgramSpec
     from repro.sharding import LogicalArray
     mod = model_module(cfg)
+    ring = spec_k is None
     p_abstract = mod.abstract_params(cfg)
-    c_abstract = transformer.abstract_cache(cfg, batch, max_len)
+    c_abstract = transformer.abstract_cache(cfg, batch, max_len, ring=ring)
     tok_batch = LogicalArray((batch, prefill_len), jnp.int32,
                              ("batch", "seq"))
     lens_batch = LogicalArray((batch,), jnp.int32, ("batch",))
@@ -318,20 +347,21 @@ def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
     tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
     scalar = LogicalArray((), jnp.int32, ())
     prefill = make_prefill_step(cfg, rules)
-    context = _spec_context(cfg, rules, batch, max_len, prefill_len)
+    context = _spec_context(cfg, rules, batch, max_len, prefill_len,
+                            *(() if ring else ("spec", spec_k)))
 
     def prefill_batch(params, caches, tokens, lengths):
         return prefill(params, caches,
                        {"tokens": tokens, "lengths": lengths})
 
-    return {
+    specs = {
         "prefill": ProgramSpec(
             key="prefill", fn=prefill_batch,
             abstract_args=(p_abstract, c_abstract, tok_batch, lens_batch),
             donate_argnums=(1,), context=context),
         "prefill_slot": ProgramSpec(
             key="prefill_slot",
-            fn=make_prefill_slot_step(cfg, rules, max_len),
+            fn=make_prefill_slot_step(cfg, rules, max_len, ring=ring),
             abstract_args=(p_abstract, c_abstract, tok_slot, scalar, scalar),
             donate_argnums=(1,), context=context),
         "decode": ProgramSpec(
@@ -339,19 +369,30 @@ def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
             abstract_args=(p_abstract, c_abstract, tok_decode),
             donate_argnums=(1,), context=context),
     }
+    if spec_k is not None:
+        tok_verify = LogicalArray((batch, spec_k + 1), jnp.int32,
+                                  ("batch", None))
+        specs["verify"] = ProgramSpec(
+            key="verify", fn=make_verify_step(cfg, rules),
+            abstract_args=(p_abstract, c_abstract, tok_verify),
+            donate_argnums=(1,), context=context)
+    return specs
 
 
 def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
                               prefill_len: int, kv_block: int,
-                              arena_blocks: int):
-    """The paged serving engine's two programs as typed ProgramSpecs.
+                              arena_blocks: int,
+                              spec_k: Optional[int] = None):
+    """The paged serving engine's programs as typed ProgramSpecs.
 
     ``prefill_slot`` admits one request into the arena blocks its slot's
     block-table row maps; ``decode`` advances every mapped slot one greedy
-    token through block-table-indexed cache reads/writes.  Both are pure
-    array programs (the pager moves blocks host<->device only between
-    executions), so they serialize into a :class:`ProgramStore` and warm-
-    boot by deserialization exactly like the dense programs.
+    token through block-table-indexed cache reads/writes; with ``spec_k``
+    a ``verify`` program speculatively scores ``spec_k`` drafts per slot
+    (rejected block writes are scatter-restored through the block table).
+    All are pure array programs (the pager moves blocks host<->device only
+    between executions), so they serialize into a :class:`ProgramStore`
+    and warm-boot by deserialization exactly like the dense programs.
     """
     from repro.core.program_store import ProgramSpec
     from repro.sharding import LogicalArray
@@ -363,8 +404,9 @@ def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
     tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
     scalar = LogicalArray((), jnp.int32, ())
     context = _spec_context(cfg, rules, batch, max_len, prefill_len,
-                            "paged", kv_block, arena_blocks)
-    return {
+                            "paged", kv_block, arena_blocks,
+                            *(() if spec_k is None else ("spec", spec_k)))
+    specs = {
         "prefill_slot": ProgramSpec(
             key="prefill_slot",
             fn=make_paged_prefill_slot_step(cfg, rules, max_len, kv_block),
@@ -375,6 +417,14 @@ def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
             abstract_args=(p_abstract, c_abstract, tok_decode),
             donate_argnums=(1,), context=context),
     }
+    if spec_k is not None:
+        tok_verify = LogicalArray((batch, spec_k + 1), jnp.int32,
+                                  ("batch", None))
+        specs["verify"] = ProgramSpec(
+            key="verify", fn=make_verify_step(cfg, rules),
+            abstract_args=(p_abstract, c_abstract, tok_verify),
+            donate_argnums=(1,), context=context)
+    return specs
 
 
 def train_program_spec(cfg, rules, opt_cfg: AdamWConfig, abstract_state,

@@ -12,3 +12,20 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+class ForcedProposer:
+    """Speculative-decoding test double for ``repro.spec.NGramProposer``:
+    always offers k drafts (cycled from the observed history) so every
+    engine iteration takes the verify/rollback path — and the drafts,
+    right or wrong, must never move the stream off the non-speculative
+    reference.  Patch it over ``repro.launch.serve.NGramProposer``."""
+
+    def __init__(self, ngram):
+        self.h = []
+
+    def observe(self, toks):
+        self.h.extend(int(t) for t in toks)
+
+    def propose(self, k):
+        return [self.h[(len(self.h) + i) % len(self.h)] for i in range(k)]

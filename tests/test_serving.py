@@ -9,11 +9,15 @@ The properties the v2 engine must hold (ISSUE 1 acceptance criteria):
     batch-of-1 reference decode of the same prompt;
   * right-padded prefill is padding-length independent for attention
     architectures (per-slot length masking);
-  * the admission queue is bounded and EOS terminates early.
+  * the admission queue is bounded and EOS terminates early;
+  * the speculative engine (ISSUE 4) is token-identical to the
+    non-speculative engine for every family, paged and unpaged, even with
+    every step forced through the verify/rollback path.
 """
 import numpy as np
 import pytest
 
+from conftest import ForcedProposer
 from repro.core import ProgramStore
 from repro.launch.serve import (METRIC_DECODE_MS, METRIC_OCCUPANCY,
                                 METRIC_TTFT_MS, ServingEngine)
@@ -90,6 +94,34 @@ def test_generated_tokens_match_batch1_reference(arch):
         assert len(r.generated) == r.max_new
         ref = eng.reference_generate(r.prompt, r.max_new)
         assert r.generated == ref, (r.rid, r.generated, ref)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["unpaged", "paged"])
+def test_speculative_engine_token_identical_to_nonspec(arch, paged,
+                                                       monkeypatch):
+    """ISSUE 4 exactness matrix: the speculative engine (n-gram drafts +
+    verify/rollback) is token-for-token identical to the non-speculative
+    engine for every model family, in both paged and unpaged modes, with
+    every step forced through the verify program."""
+    from repro.launch import serve as serve_mod
+    monkeypatch.setattr(serve_mod, "NGramProposer", ForcedProposer)
+    kw = dict(reduced=True, batch=2, max_len=48, clock="step",
+              spec_k=3, spec_ngram=2)
+    if paged:
+        kw.update(paged=True, kv_block=8, arena_blocks=12)
+    eng = ServingEngine(arch, **kw)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(1, eng.cfg.vocab_size, size=n),
+                       max_new=m, arrival_time=t)
+            for n, m, t in ((4, 6, 0.0), (9, 5, 0.0), (6, 7, 2.0))]
+    stats = eng.run()
+    assert stats["requests"] == 3, stats
+    assert eng.spec_steps >= 1          # the verify path actually ran
+    for r in reqs:
+        ref = eng.reference_generate(r.prompt, r.max_new)
+        assert r.generated == ref, (arch, paged, r.rid, r.generated, ref)
 
 
 def test_prefill_padding_length_independence():

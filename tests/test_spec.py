@@ -1,0 +1,268 @@
+"""Speculative decoding tests (ISSUE 4 tentpole).
+
+Three layers of coverage:
+
+  * the n-gram prompt-lookup proposer: proposals are always verbatim
+    slices of the observed history following an occurrence of the final
+    n-gram; degenerate/short histories propose nothing rather than
+    crashing (hypothesis property tests with the fixed-vector fallback);
+  * verify/rollback invariants: after a verify step that rejects j of k
+    drafts, the cache pytree — attention KV (dense, windowed, paged block
+    tables) and recurrent state (SSM conv/state, RG-LRU conv/h) — is
+    BYTE-identical to having decoded the accepted tokens one at a time,
+    including the worst-case all-rejected step; speculative paged block
+    over-allocation is reclaimed on rejection without losing a block;
+  * the system path: ``verify_step`` serializes into the ProgramStore and
+    a rebooted speculative engine installs it by deserialization
+    (``compile_s == 0``) while staying token-exact.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import ForcedProposer
+from repro.core import ProgramStore
+from repro.launch.serve import ServingEngine
+from repro.spec import NGramProposer
+
+# hypothesis is optional: the property-based cases skip cleanly on a bare
+# environment so tier-1 collection never depends on it
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# proposer properties
+# ---------------------------------------------------------------------------
+def _proposer_property(history, ngram, k):
+    prop = NGramProposer(ngram)
+    prop.observe(history)
+    assert prop.history == [int(t) for t in history]
+    out = prop.propose(k)
+    assert len(out) <= max(k, 0)
+    if len(history) < ngram + 1 or k <= 0:
+        assert out == []
+        return
+    if not out:
+        return
+    # every proposal is a verbatim slice of the observed history that
+    # immediately follows an occurrence of the history's final n-gram
+    starts = [s for s in range(ngram, len(history) - len(out) + 1)
+              if history[s - ngram:s] == history[-ngram:]
+              and history[s:s + len(out)] == out]
+    assert starts, (history, ngram, k, out)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(history=st.lists(st.integers(0, 6), min_size=0, max_size=60),
+           ngram=st.integers(1, 4),
+           k=st.integers(0, 8))
+    def test_proposer_proposals_come_from_history(history, ngram, k):
+        _proposer_property(history, ngram, k)
+else:
+    def test_proposer_proposals_come_from_history():
+        """Fixed-vector fallback when hypothesis is unavailable."""
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            _proposer_property(
+                history=list(rng.integers(0, 7,
+                                          size=int(rng.integers(0, 61)))),
+                ngram=int(rng.integers(1, 5)),
+                k=int(rng.integers(0, 9)))
+
+
+def test_proposer_degenerate_histories_propose_nothing():
+    for hist in ([], [3], [3, 3], list(range(5))):
+        prop = NGramProposer(2)
+        prop.observe(hist)
+        if len(hist) <= 2:
+            assert prop.propose(4) == []
+    # unseen suffix: final bigram occurs nowhere earlier
+    prop = NGramProposer(2)
+    prop.observe([1, 2, 3, 4, 5])
+    assert prop.propose(4) == []
+
+
+def test_proposer_prefers_occurrence_with_full_continuation():
+    """In a tight cycle the latest match sits at the history tail; the
+    proposer must reach back to an occurrence with k tokens of follow-up
+    instead of returning a near-empty proposal."""
+    prop = NGramProposer(2)
+    prop.observe([7] * 20)
+    assert prop.propose(8) == [7] * 8
+    prop = NGramProposer(2)
+    prop.observe([1, 2, 3] * 6)     # suffix (2, 3) -> continuation 1, 2, 3...
+    assert prop.propose(6) == [1, 2, 3, 1, 2, 3]
+
+
+def test_proposer_incremental_observe_matches_bulk():
+    rng = np.random.default_rng(1)
+    toks = list(rng.integers(0, 5, size=40))
+    bulk = NGramProposer(2)
+    bulk.observe(toks)
+    inc = NGramProposer(2)
+    for t in toks:
+        inc.observe([t])
+    assert bulk.propose(5) == inc.propose(5)
+
+
+# ---------------------------------------------------------------------------
+# verify/rollback invariants
+# ---------------------------------------------------------------------------
+SPEC_K = 4
+
+
+def _spec_engine(arch, paged, batch=1, max_len=32):
+    kw = dict(reduced=True, batch=batch, max_len=max_len, clock="step",
+              spec_k=SPEC_K, spec_ngram=2)
+    if paged:
+        kw.update(paged=True, kv_block=8,
+                  arena_blocks=batch * max_len // 8)
+    return ServingEngine(arch, **kw)
+
+
+def _mid_decode_snapshot(eng, prompt, max_new=20):
+    """Admit one request and advance a couple of steps; return (req,
+    host snapshot of the live cache, the request's last emitted token)."""
+    req = eng.submit(prompt, max_new=max_new)
+    for _ in range(3):
+        eng.step()
+    assert not req.done
+    snap = jax.tree.map(np.asarray, eng.caches)
+    return req, snap, req.generated[-1]
+
+
+def _continuation(eng, snap, last, n):
+    """Sequential greedy continuation from the snapshot via the engine's
+    own hot-loaded decode program."""
+    c = jax.tree.map(jnp.asarray, snap)
+    out, tok = [], last
+    for _ in range(n):
+        c, nt, _ = eng._decode(eng.params, c, jnp.asarray([[tok]], np.int32))
+        tok = int(np.asarray(nt)[0, 0])
+        out.append(tok)
+    return out
+
+
+@pytest.mark.parametrize("arch,paged", [
+    ("qwen3-0.6b", False),          # dense
+    ("gemma3-4b", False),           # sliding-window (non-ring buffers)
+    ("mamba2-130m", False),         # SSM (recurrent snapshot select)
+    ("recurrentgemma-2b", False),   # hybrid (RG-LRU + local attention)
+    ("olmoe-1b-7b", False),         # MoE
+    ("qwen3-0.6b", True),           # paged block tables
+    ("recurrentgemma-2b", True),    # paged + recurrent rows
+])
+def test_verify_rollback_is_byte_identical_to_sequential(arch, paged):
+    """Accepting t of k drafts must leave the ENTIRE cache pytree —
+    ``pos``, KV buffers/arena, block tables, recurrent state — byte-equal
+    to feeding the accepted tokens through the decode program one at a
+    time.  t = 0 is the worst-case all-rejected step."""
+    eng = _spec_engine(arch, paged)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, eng.cfg.vocab_size, size=6)
+    req, snap, last = _mid_decode_snapshot(eng, prompt)
+    cont = _continuation(eng, snap, last, SPEC_K + 1)
+    vocab = eng.cfg.vocab_size
+
+    for t in (0, SPEC_K // 2, SPEC_K):   # all-rejected / partial / all
+        drafts = cont[:t] + [(cont[t] + 1) % vocab] * (SPEC_K - t)
+        tokens = jnp.asarray([[last] + drafts], np.int32)
+        c0 = jax.tree.map(jnp.asarray, snap)
+        nc, ys, n_new = eng._verify(eng.params, c0, tokens)
+        assert int(np.asarray(n_new)[0]) == t + 1, (arch, paged, t)
+        assert list(np.asarray(ys)[0, :t + 1]) == cont[:t + 1]
+
+        replay = jax.tree.map(jnp.asarray, snap)
+        for tok in [last] + cont[:t]:
+            replay, _, _ = eng._decode(eng.params, replay,
+                                       jnp.asarray([[tok]], np.int32))
+        mismatches = [
+            path for path, equal in jax.tree_util.tree_flatten_with_path(
+                jax.tree.map(
+                    lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                     np.asarray(b))),
+                    nc, replay))[0] if not equal]
+        assert not mismatches, (arch, paged, t, mismatches)
+
+
+def test_verify_overshoot_past_cache_capacity_is_dropped(monkeypatch):
+    """A verify step whose candidate positions run past the cache buffer
+    (request near max_len) must not wrap-corrupt slot 0: output stays
+    exact even with every step forced through the verify path."""
+    from repro.launch import serve as serve_mod
+    monkeypatch.setattr(serve_mod, "NGramProposer", ForcedProposer)
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=1, max_len=16,
+                        clock="step", spec_k=4, spec_ngram=2)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, eng.cfg.vocab_size, size=6)
+    req = eng.submit(prompt, max_new=12)   # clipped to max_len - 6 = 10
+    eng.run()
+    assert req.done and eng.spec_steps >= 1
+    assert req.generated == eng.reference_generate(prompt, req.max_new)
+
+
+def test_paged_spec_overallocation_is_reclaimed_on_rejection(monkeypatch):
+    """Speculative block over-allocation: verify steps near a request's
+    horizon grow its page so draft writes land in mapped blocks, and the
+    speculative tail is reclaimed after the step — no leaked blocks, no
+    lost bytes, token-exact output."""
+    from repro.launch import serve as serve_mod
+    monkeypatch.setattr(serve_mod, "NGramProposer", ForcedProposer)
+    # kv_block=2 + spec_k=6: verify candidates cross the base reservation
+    # (prompt 6 + max_new 8 -> 7 blocks) from the third generated token on,
+    # so mid-life steps grow AND trim, not just the final one (whose grown
+    # tail is freed by release instead)
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                        clock="step", paged=True, kv_block=2,
+                        arena_blocks=32, spec_k=6, spec_ngram=2)
+    rng = np.random.default_rng(3)
+    reqs = [eng.submit(rng.integers(1, 500, size=6), max_new=8)
+            for _ in range(3)]
+    stats = eng.run()
+    assert stats["requests"] == 3
+    assert eng.spec_steps >= 1
+    rep = eng.pager.report()
+    assert rep["grown_blocks"] >= 1, rep
+    assert 1 <= rep["reclaimed_blocks"] <= rep["grown_blocks"], rep
+    assert rep["free_blocks"] == eng.pager.arena_blocks   # nothing leaked
+    assert eng.pager.table.resident_bytes == 0
+    for r in reqs:
+        assert r.generated == eng.reference_generate(r.prompt, r.max_new)
+
+
+# ---------------------------------------------------------------------------
+# system path: verify_step through the persistent program store
+# ---------------------------------------------------------------------------
+def test_spec_warm_boot_from_store_is_load_only_and_token_exact(tmp_path):
+    """``verify_step`` is a pure array program: it must serialize into the
+    ProgramStore and a rebooted speculative engine must install it by
+    deserialization (load_s > 0, compile_s == 0) with identical output."""
+    kw = dict(reduced=True, batch=2, max_len=32, clock="step",
+              spec_k=3, spec_ngram=2)
+    rng = np.random.default_rng(4)
+    prompts = [np.tile(rng.integers(1, 500, size=3), 4) for _ in range(3)]
+
+    cold = ServingEngine("qwen3-0.6b", store=ProgramStore(tmp_path), **kw)
+    cold_reqs = [cold.submit(p, max_new=6) for p in prompts]
+    cold.run()
+    if cold.syscore.store.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+
+    warm = ServingEngine("qwen3-0.6b", store=ProgramStore(tmp_path), **kw)
+    progs = warm.syscore.report()["programs"]
+    for name in ("prefill", "prefill_slot", "decode", "verify"):
+        assert progs[name]["source"] == "store", (name, progs[name])
+        assert progs[name]["load_s"] > 0, (name, progs[name])
+        assert progs[name]["compile_s"] == 0, (name, progs[name])
+    warm_reqs = [warm.submit(p, max_new=6) for p in prompts]
+    warm.run()
+    for c, w, p in zip(cold_reqs, warm_reqs, prompts):
+        assert w.generated == c.generated
+        assert w.generated == warm.reference_generate(p, 6)
