@@ -9,9 +9,10 @@ C4 dynamic_calls.py  paged weights & programs with jump table + LRU arena
 C5 hostcall.py/uva.py  host-call RPC (numbered ABI) + unified address space
 """
 from repro.core.dynamic_calls import DCEntry, DynamicCallTable, PagedExpertStore
-from repro.core.hostcall import (CALL_CHECKPOINT_REQUEST, CALL_LOG,
-                                 CALL_METRIC, CALL_STEP_REPORT, CALL_TIME,
-                                 HostCallTable, hostcall, register_user_call)
+from repro.core.hostcall import (CALL_BATCH, CALL_CHECKPOINT_REQUEST,
+                                 CALL_LOG, CALL_METRIC, CALL_STEP_REPORT,
+                                 CALL_TIME, HostCallTable, hostcall,
+                                 register_user_call)
 from repro.core.paging import PagedKVManager
 from repro.core.placement import (DYNAMIC, USRCORE, USRMEM, PlacedTree,
                                   PlacementPlan, apply_plan, footprint)
@@ -27,8 +28,9 @@ from repro.core.uva import Buffer, UVARegistry
 
 __all__ = [
     "DCEntry", "DynamicCallTable", "PagedExpertStore",
-    "CALL_CHECKPOINT_REQUEST", "CALL_LOG", "CALL_METRIC", "CALL_STEP_REPORT",
-    "CALL_TIME", "HostCallTable", "hostcall", "register_user_call",
+    "CALL_BATCH", "CALL_CHECKPOINT_REQUEST", "CALL_LOG", "CALL_METRIC",
+    "CALL_STEP_REPORT", "CALL_TIME", "HostCallTable", "hostcall",
+    "register_user_call",
     "PagedKVManager",
     "DYNAMIC", "USRCORE", "USRMEM", "PlacedTree", "PlacementPlan",
     "apply_plan", "footprint",

@@ -37,6 +37,10 @@ CALL_CHECKPOINT_REQUEST = 514
 CALL_TIME = 515
 CALL_STEP_REPORT = 516        # straggler/step-time telemetry
 CALL_DMALLOC = 517            # shared-buffer allocation through the UVA
+CALL_BATCH = 518              # aggregated dispatch: one round trip carrying
+                              # many (number, *args) calls — the coalescing
+                              # idiom of the paper's hostcall daemon applied
+                              # to per-step telemetry
 
 
 class HostCallTable:
@@ -74,6 +78,7 @@ class HostCallTable:
         self._table[CALL_TIME] = lambda: time.time()
         self._table[CALL_STEP_REPORT] = self._step_report
         self._table[CALL_CHECKPOINT_REQUEST] = self._ckpt_request
+        self._table[CALL_BATCH] = self._batch
 
     # -- builtin impls ---------------------------------------------------------
     def _log(self, step, value):
@@ -87,6 +92,33 @@ class HostCallTable:
 
     def _ckpt_request(self, step):
         self.checkpoint_requests.append(int(step))
+
+    def _batch(self, calls):
+        """One round trip, many calls: ``calls`` is a sequence of
+        ``(number, *args)`` tuples, each dispatched in order.  The serving
+        engine's per-step telemetry (decode latency + occupancy + arena /
+        acceptance gauges + the step report) collapses from 4-5 round trips
+        into one."""
+        for entry in calls:
+            self.dispatch(entry[0], *entry[1:])
+
+    # -- channel maintenance -----------------------------------------------
+    def drain_metrics(self, keep=()) -> Dict[int, list]:
+        """Return-and-reset every CALL_METRIC channel not in ``keep``.
+
+        One pass over the *live channels* — each channel's list is handed
+        back whole and replaced with a fresh empty one, so a resident
+        engine's periodic drain costs O(channels + values since the last
+        drain), never a per-code rescan of total lifetime history (and new
+        metric codes are covered automatically, with no hand-maintained
+        code list to go stale)."""
+        drained: Dict[int, list] = {}
+        for code in list(self.metrics):
+            if code in keep:
+                continue
+            drained[code] = self.metrics[code]
+            self.metrics[code] = []
+        return drained
 
     # -- dispatch --------------------------------------------------------------
     def dispatch(self, number: int, *args):

@@ -52,12 +52,35 @@ import numpy as np
 # ---------------------------------------------------------------------------
 def _fn_source(fn: Callable) -> str:
     """Best-effort stable identity for ``fn``: its source text, else its
-    qualified name.  Closures over config objects are NOT captured here —
-    callers fold those into ``ProgramSpec.context``."""
+    qualified name — plus any *scalar* closure cells.
+
+    Factory-made programs (``make_decode_horizon_step(cfg, rules, horizon,
+    eos_id)`` and friends) all share the inner def's source text, so two
+    closures differing only in a captured static (a horizon length, an EOS
+    id, a cache length, a ring flag) would otherwise fingerprint
+    identically unless every caller remembers to fold the static into
+    ``ProgramSpec.context``.  Hashing primitive cell contents
+    (int/float/bool/str/bytes/None) closes that silent-collision hole;
+    structured captures (config objects, rules dicts) remain the caller's
+    job via ``context``."""
     try:
-        return inspect.getsource(fn)
+        src = inspect.getsource(fn)
     except (OSError, TypeError):
-        return getattr(fn, "__qualname__", repr(fn))
+        src = getattr(fn, "__qualname__", repr(fn))
+    cells = getattr(fn, "__closure__", None)
+    code = getattr(fn, "__code__", None)
+    if cells and code is not None:
+        scalars = []
+        for name, cell in zip(code.co_freevars, cells):
+            try:
+                v = cell.cell_contents
+            except ValueError:          # cell not yet filled
+                continue
+            if v is None or isinstance(v, (bool, int, float, str, bytes)):
+                scalars.append(f"{name}={v!r}")
+        if scalars:
+            src += "\n# closure: " + ", ".join(scalars)
+    return src
 
 
 def _leaf_desc(path, leaf) -> str:

@@ -55,6 +55,23 @@ token IDENTICAL to the non-speculative engine no matter how wrong the
 drafts are.  In paged mode, speculative blocks are over-allocated before
 the verify call (``PagedKVManager.grow``) and reclaimed on rejection
 (``trim_to_base``).
+
+Fused decode horizons (v5): with ``horizon=H`` the engine hot-loads a
+``decode_horizon`` program that runs H decode iterations in ONE dispatch
+(``lax.scan`` of the same per-token decode step, in-graph greedy
+feedback, per-slot termination masking), returning a device-side event
+buffer — emitted tokens, per-slot finish step, occupancy — in one
+transfer.  Host bookkeeping (admissions, paged-arena pressure,
+preemption, metrics) happens only at horizon boundaries, and the horizon
+adaptively shrinks to a single plain ``decode`` dispatch while an
+eligible request is waiting in the queue — a queued request never waits
+behind a fused dispatch (a wall-clock arrival landing MID-horizon still
+waits out the remainder of that horizon, at most H-1 decode steps; that
+bounded tail is the one TTFT cost of fusing).
+Output streams stay token-for-token identical to the step-at-a-time
+engine; the host boundary is simply crossed once per horizon, not once
+per token — the paper's "keep control resident on the device" lesson
+applied to the generation loop itself.
 """
 from __future__ import annotations
 
@@ -70,7 +87,9 @@ import numpy as np
 
 from repro import steps as steps_lib
 from repro.core import ProgramStore, Syscore
-from repro.core.hostcall import CALL_METRIC, CALL_STEP_REPORT
+from repro.core.hostcall import CALL_BATCH, CALL_METRIC, CALL_STEP_REPORT
+from repro.core.syscore import (METRIC_PROGRAM_COMPILE_MS,
+                                METRIC_PROGRAM_LOAD_MS)
 from repro.models import registry, transformer
 from repro.sharding import make_rules
 from repro.spec import NGramProposer
@@ -84,6 +103,7 @@ METRIC_PAGE_FAULT = 6     # paged KV swap-in copied blocks from host (value
                           # = blocks moved), per fault
 METRIC_ARENA_OCCUPANCY = 7  # resident arena blocks / capacity, per decode step
 METRIC_SPEC_ACCEPT = 8    # accepted / proposed draft tokens, per verify step
+METRIC_HORIZON_TOKENS = 9  # tokens emitted per fused decode-horizon dispatch
 
 
 @dataclass
@@ -164,6 +184,21 @@ class ServingEngine:
         layers switch to full-length (non-ring) cache buffers so rollback
         can address rejected slots absolutely.
     spec_ngram: suffix n-gram length the prompt-lookup proposer matches on.
+    horizon: fused multi-step decode — hot-load a ``decode_horizon``
+        program that runs up to ``horizon`` decode iterations in ONE
+        dispatch (in-graph greedy feedback + per-slot termination masking)
+        and returns emitted tokens / finish steps / occupancy as a
+        device-side event buffer, so host bookkeeping happens only at
+        horizon boundaries.  The horizon adaptively shrinks to a single
+        plain ``decode`` step while an eligible request waits in the queue
+        (a queued request never waits behind a fused dispatch; a wall-
+        clock arrival landing mid-horizon waits at most the remainder of
+        that horizon) or when no slot can emit >= 2 more tokens.
+        Token streams are identical to the step-at-a-time engine — the
+        horizon scan reuses the same per-token decode step.  Composes with
+        ``paged`` and with ``spec_k`` (a verify iteration whose proposers
+        have nothing to offer falls back to a horizon instead of a single
+        decode).  ``None`` / ``1`` = classic one-dispatch-per-token decode.
     """
 
     def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
@@ -175,7 +210,8 @@ class ServingEngine:
                  paged: bool = False, kv_block: int = 8,
                  arena_blocks: Optional[int] = None,
                  timeslice: Optional[int] = None,
-                 spec_k: Optional[int] = None, spec_ngram: int = 2):
+                 spec_k: Optional[int] = None, spec_ngram: int = 2,
+                 horizon: Optional[int] = None):
         self.arch = arch
         self.reduced = reduced
         self.cfg = registry.get_config(arch, reduced=reduced)
@@ -208,6 +244,10 @@ class ServingEngine:
         self.pager = None
         self.spec_k = spec_k
         self.spec_ngram = spec_ngram
+        self.horizon = horizon if horizon is not None and horizon >= 2 \
+            else None
+        if horizon is not None:
+            assert horizon >= 1, horizon
         if spec_k is not None:
             assert spec_k >= 1, spec_k
             assert not group_prefill, \
@@ -224,17 +264,20 @@ class ServingEngine:
             specs = steps_lib.paged_serve_program_specs(
                 cfg, self.rules, batch=batch, max_len=max_len,
                 prefill_len=self.prefill_len, kv_block=kv_block,
-                arena_blocks=self.arena_blocks, spec_k=spec_k)
+                arena_blocks=self.arena_blocks, spec_k=spec_k,
+                horizon=self.horizon, eos_id=eos_id)
         else:
             specs = steps_lib.serve_program_specs(
                 cfg, self.rules, batch=batch, max_len=max_len,
-                prefill_len=self.prefill_len, spec_k=spec_k)
+                prefill_len=self.prefill_len, spec_k=spec_k,
+                horizon=self.horizon, eos_id=eos_id)
         self.programs = {name: self.syscore.hot_load(spec)
                          for name, spec in specs.items()}
         self._prefill = self.programs.get("prefill")
         self._prefill_slot = self.programs["prefill_slot"]
         self._decode = self.programs["decode"]
         self._verify = self.programs.get("verify")
+        self._decode_horizon = self.programs.get("decode_horizon")
 
         if paged:
             from repro.core.paging import PagedKVManager
@@ -260,7 +303,10 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.steps = 0                 # engine iterations (incl. idle ticks)
-        self.decode_steps = 0
+        self.decode_steps = 0          # decode-path program dispatches
+        self.decode_tokens = 0         # tokens emitted by the decode path
+        self.horizon_steps = 0         # decode_horizon executions
+        self.horizon_tokens = 0        # tokens emitted by fused horizons
         self.admitted = 0
         self.rejected = 0
         self.refill_admissions = 0     # admissions while other slots active
@@ -461,6 +507,19 @@ class ServingEngine:
                                                      self.caches)
                 self.slots[req.slot] = None
 
+    def _step_metrics(self, dt: float, occupancy: float, extra=()):
+        """ONE aggregated hostcall round trip per engine step (CALL_BATCH)
+        carrying what used to be 4-5 separate dispatches: decode latency,
+        occupancy, optional gauges and the step report."""
+        calls = [(CALL_METRIC, METRIC_DECODE_MS, 1e3 * dt),
+                 (CALL_METRIC, METRIC_OCCUPANCY, occupancy)]
+        calls.extend(extra)
+        if self.paged:
+            calls.append((CALL_METRIC, METRIC_ARENA_OCCUPANCY,
+                          self.pager.arena_occupancy()))
+        calls.append((CALL_STEP_REPORT, self.decode_steps, dt))
+        self.syscore.hostcalls.dispatch(CALL_BATCH, calls)
+
     def _decode_once(self):
         tokens = np.zeros((self.batch, 1), np.int32)
         for i, req in enumerate(self.slots):
@@ -473,16 +532,8 @@ class ServingEngine:
         nt = np.asarray(next_tok)           # blocks on the device result
         dt = time.perf_counter() - t1
         self.decode_steps += 1
-        self.syscore.hostcalls.dispatch(CALL_METRIC, METRIC_DECODE_MS,
-                                        1e3 * dt)
-        self.syscore.hostcalls.dispatch(CALL_METRIC, METRIC_OCCUPANCY,
-                                        active / self.batch)
-        if self.paged:
-            self.syscore.hostcalls.dispatch(CALL_METRIC,
-                                            METRIC_ARENA_OCCUPANCY,
-                                            self.pager.arena_occupancy())
-        self.syscore.hostcalls.dispatch(CALL_STEP_REPORT, self.decode_steps,
-                                        dt)
+        self.decode_tokens += active
+        self._step_metrics(dt, active / self.batch)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -500,7 +551,8 @@ class ServingEngine:
         proposer has nothing to offer are padded with their last token —
         the verify math keeps them exact either way (an accepted token is
         always the model's own greedy token).  Falls back to the plain
-        ``decode`` program when no slot has a proposal at all."""
+        ``decode`` program — or a fused decode horizon, when one is
+        loaded — when no slot has a proposal at all."""
         k = self.spec_k
         tokens = np.zeros((self.batch, k + 1), np.int32)
         n_props = np.zeros((self.batch,), np.int32)
@@ -513,7 +565,7 @@ class ServingEngine:
             tokens[i, 1:1 + len(props)] = props
         drafted = int(n_props.sum())
         if drafted == 0:
-            self._decode_once()
+            self._advance_decode()
             return
         active = sum(s is not None for s in self.slots)
         if self.paged:
@@ -547,6 +599,7 @@ class ServingEngine:
                 req.generated.append(int(ys[i, j]))
                 used += 1
                 self._maybe_finish(req)
+            self.decode_tokens += used
             accepted += min(used - 1, int(n_props[i]))
             if req.rid in self._proposers:
                 self._proposers[req.rid].observe(req.generated[-used:])
@@ -556,19 +609,107 @@ class ServingEngine:
                 self.caches = self.pager.trim_to_base(req.rid, i, self.caches)
         self.draft_tokens += drafted
         self.accepted_drafts += accepted
-        hc = self.syscore.hostcalls
-        hc.dispatch(CALL_METRIC, METRIC_DECODE_MS, 1e3 * dt)
-        hc.dispatch(CALL_METRIC, METRIC_OCCUPANCY, active / self.batch)
-        hc.dispatch(CALL_METRIC, METRIC_SPEC_ACCEPT, accepted / drafted)
-        if self.paged:
-            hc.dispatch(CALL_METRIC, METRIC_ARENA_OCCUPANCY,
-                        self.pager.arena_occupancy())
-        hc.dispatch(CALL_STEP_REPORT, self.decode_steps, dt)
+        self._step_metrics(dt, active / self.batch,
+                           extra=[(CALL_METRIC, METRIC_SPEC_ACCEPT,
+                                   accepted / drafted)])
+
+    # -- fused decode horizons ------------------------------------------------
+    def _budget_left(self, req: Request) -> int:
+        """Tokens ``req`` may still emit (max_new and cache-length caps)."""
+        return min(req.max_new,
+                   self.max_len - req.prompt_len) - len(req.generated)
+
+    def _use_horizon(self) -> bool:
+        """Adaptive horizon policy: fuse only when it cannot hurt latency.
+
+        With an eligible request waiting in the queue, a slot that frees
+        mid-horizon would leave the waiter stuck behind the fused dispatch
+        (TTFT regression), so the engine shrinks to single-step decode —
+        UNLESS admission is provably impossible for the whole horizon:
+        every slot holds a request that cannot finish inside it, which is
+        predictable exactly when finishes come only from budget exhaustion
+        (no EOS) and no timeslice preemption can rotate a slot out.  A
+        saturated engine with a backed-up queue therefore still fuses —
+        the regime fusion targets most.
+
+        Fusing also needs some row able to amortize a meaningful part of
+        the scan: a short tail (every remaining budget < H/2) is cheaper
+        as single steps than as one dispatch whose scan runs mostly
+        frozen."""
+        if self._decode_horizon is None:
+            return False
+        if self.queue and self.queue[0].arrival_time <= self.now():
+            if self.eos_id is not None or self.timeslice is not None:
+                return False
+            if not all(s is not None and self._budget_left(s) > self.horizon
+                       for s in self.slots):
+                return False
+        return any(s is not None and
+                   self._budget_left(s) >= max(2, self.horizon // 2)
+                   for s in self.slots)
+
+    def _advance_decode(self):
+        """One decode-path advance: a fused horizon when the adaptive
+        policy allows it, else the classic single-token dispatch."""
+        if self._use_horizon():
+            self._decode_horizon_once()
+        else:
+            self._decode_once()
+
+    def _decode_horizon_once(self):
+        """One fused horizon: up to ``self.horizon`` decode iterations in a
+        single program dispatch.  The host crosses the boundary once — the
+        event buffer (emitted tokens, per-slot finish steps, occupancy)
+        comes back as arrays, and ALL bookkeeping (generated-token append,
+        EOS/budget finishes, paged block release, proposer feed, metrics)
+        happens here, at the horizon boundary."""
+        tokens = np.zeros((self.batch, 1), np.int32)
+        budget = np.zeros((self.batch,), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tokens[i, 0] = req.generated[-1]
+            budget[i] = min(self._budget_left(req), self.horizon)
+        active = sum(s is not None for s in self.slots)
+        t1 = time.perf_counter()
+        self.caches, events = self._decode_horizon(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(budget))
+        toks = np.asarray(events["tokens"])      # blocks on the device result
+        n_emit = np.asarray(events["n_emitted"])
+        occ = np.asarray(events["occupancy"])
+        dt = time.perf_counter() - t1
+        emitted = int(n_emit.sum())
+        self.decode_steps += 1
+        self.horizon_steps += 1
+        self.decode_tokens += emitted
+        self.horizon_tokens += emitted
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            new = [int(t) for t in toks[i, :n_emit[i]]]
+            req.generated.extend(new)
+            if new and self.spec_k is not None and \
+                    req.rid in self._proposers:
+                self._proposers[req.rid].observe(new)
+            self._maybe_finish(req)
+        # one METRIC_OCCUPANCY entry per *executed* in-graph step (steps
+        # after every row froze are skipped), so the channel keeps its
+        # per-decode-step weighting: a horizon covering 15 tokens
+        # contributes 15 entries, exactly like 15 single-step dispatches
+        # would — run()'s occupancy mean stays token-step-weighted when
+        # fused and single-step phases mix
+        ran = [float(o) for o in occ if o > 0]
+        extra = [(CALL_METRIC, METRIC_OCCUPANCY, o) for o in ran[1:]]
+        extra.append((CALL_METRIC, METRIC_HORIZON_TOKENS, float(emitted)))
+        self._step_metrics(dt, ran[0] if ran else 0.0, extra=extra)
+        return dt
 
     def step(self) -> bool:
-        """One engine iteration: admit into free slots, then one decode (or
-        speculative verify) step for every active slot.  Returns False
-        when no work remains."""
+        """One engine iteration: admit into free slots, then one decode
+        advance — a fused horizon, a speculative verify or a single decode
+        step — for every active slot.  Returns False when no work
+        remains."""
         if not (self.queue or any(s is not None for s in self.slots)):
             return False
         self._admit()
@@ -576,7 +717,7 @@ class ServingEngine:
             if self.spec_k is not None:
                 self._verify_once()
             else:
-                self._decode_once()
+                self._advance_decode()
         elif self.clock == "wall" and self.queue:
             # idle: sleep toward the earliest future arrival (capped so a
             # far-future request costs O(wait/10ms) engine ticks, not a
@@ -593,9 +734,15 @@ class ServingEngine:
         memoized reference engine) gets a fresh budget and fresh stats."""
         metrics = self.syscore.hostcalls.metrics
         start_steps, done0 = self.steps, len(self.completed)
+        # window offsets are snapshotted PER CHANNEL: a fused horizon
+        # appends to some channels once per dispatch and to others once per
+        # engine step, so one shared offset would misalign the slices
         n_dec0 = len(metrics.get(METRIC_DECODE_MS, []))
         n_ttft0 = len(metrics.get(METRIC_TTFT_MS, []))
-        dec_steps0 = self.decode_steps
+        n_occ0 = len(metrics.get(METRIC_OCCUPANCY, []))
+        n_arena0 = len(metrics.get(METRIC_ARENA_OCCUPANCY, []))
+        dec_steps0, dec_toks0 = self.decode_steps, self.decode_tokens
+        hor0, hor_toks0 = self.horizon_steps, self.horizon_tokens
         adm0, ref0 = self.admitted, self.refill_admissions
         pre0, swi0 = self.preemptions, self.swap_ins
         spec0, drf0, acc0 = (self.spec_steps, self.draft_tokens,
@@ -610,7 +757,8 @@ class ServingEngine:
         toks = sum(len(r.generated) for r in completed)
         decode_ms = sorted(metrics.get(METRIC_DECODE_MS, [])[n_dec0:])
         ttft_ms = metrics.get(METRIC_TTFT_MS, [])[n_ttft0:]
-        occ = metrics.get(METRIC_OCCUPANCY, [])[n_dec0:]
+        occ = metrics.get(METRIC_OCCUPANCY, [])[n_occ0:]
+        dec_toks = self.decode_tokens - dec_toks0
         stats = {
             "requests": len(completed),
             "tokens": toks,
@@ -621,12 +769,23 @@ class ServingEngine:
             "ttft_ms": sum(ttft_ms) / max(len(ttft_ms), 1),
             "occupancy": sum(occ) / max(len(occ), 1),
             "decode_steps": self.decode_steps - dec_steps0,
+            "decode_tokens": dec_toks,
+            # host decode-path dispatches per generated token — the number
+            # the fused horizon drives toward 1/H (paper Table 1 applied
+            # to the generation loop)
+            "dispatches_per_token": (self.decode_steps - dec_steps0)
+                                    / max(dec_toks, 1),
             "admitted": self.admitted - adm0,
             # rejection happens at submit() time, outside any run() window,
             # so it stays an engine-lifetime count
             "rejected": self.rejected,
             "refill_admissions": self.refill_admissions - ref0,
         }
+        if self._decode_horizon is not None:
+            stats.update({
+                "horizon_steps": self.horizon_steps - hor0,
+                "horizon_tokens": self.horizon_tokens - hor_toks0,
+            })
         if self.spec_k is not None:
             drafted = self.draft_tokens - drf0
             accepted = self.accepted_drafts - acc0
@@ -637,7 +796,7 @@ class ServingEngine:
                 "accept_rate": accepted / max(drafted, 1),
             })
         if self.paged:
-            arena = metrics.get(METRIC_ARENA_OCCUPANCY, [])[n_dec0:]
+            arena = metrics.get(METRIC_ARENA_OCCUPANCY, [])[n_arena0:]
             stats.update({
                 "preemptions": self.preemptions - pre0,
                 "swap_ins": self.swap_ins - swi0,
@@ -651,14 +810,20 @@ class ServingEngine:
         """Hand finished requests to the caller and release engine-side
         history.  A long-lived resident engine otherwise grows
         ``completed`` and the hostcall metric channels linearly with served
-        traffic; draining between run() calls bounds both."""
+        traffic; draining between run() calls bounds both.
+
+        Channel trimming delegates to ``HostCallTable.drain_metrics``: one
+        pass over the live channels, each list swapped for a fresh empty
+        one — O(requests served since the last drain), never a rescan of
+        total lifetime history, and with no hand-maintained code list to
+        go stale as engine metric codes are added (the fused-horizon code
+        9 is covered automatically).  Only the program-lifecycle channels
+        (compile/load telemetry, codes 4/5) are kept: they describe the
+        resident programs, not served traffic."""
         done, self.completed = self.completed, []
         hc = self.syscore.hostcalls
-        for code in (METRIC_TTFT_MS, METRIC_DECODE_MS, METRIC_OCCUPANCY,
-                     METRIC_PAGE_FAULT, METRIC_ARENA_OCCUPANCY,
-                     METRIC_SPEC_ACCEPT):
-            if code in hc.metrics:
-                hc.metrics[code].clear()
+        hc.drain_metrics(keep=(METRIC_PROGRAM_COMPILE_MS,
+                               METRIC_PROGRAM_LOAD_MS))
         hc.step_times.clear()
         return done
 
@@ -702,12 +867,16 @@ def main():
                          "(n-gram prompt lookup); None = plain decode")
     ap.add_argument("--spec-ngram", type=int, default=2,
                     help="suffix n-gram length the proposer matches on")
+    ap.add_argument("--horizon", type=int, default=None,
+                    help="fused decode horizon: run up to H decode "
+                         "iterations per dispatch (None/1 = per-token)")
     args = ap.parse_args()
     eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
                         store_dir=args.store_dir, paged=args.paged,
                         kv_block=args.kv_block,
                         arena_blocks=args.arena_blocks,
-                        spec_k=args.spec_k, spec_ngram=args.spec_ngram)
+                        spec_k=args.spec_k, spec_ngram=args.spec_ngram,
+                        horizon=args.horizon)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8), args.max_new)

@@ -194,7 +194,7 @@ def gather_paged_kv(arena: jax.Array, block_table: jax.Array) -> jax.Array:
 
 
 def write_paged_kv(arena: jax.Array, block_table: jax.Array, pos: jax.Array,
-                   val: jax.Array) -> jax.Array:
+                   val: jax.Array, live=None) -> jax.Array:
     """Block-table-indexed cache write of one token per row.
 
     Row b's value (B, H, D) lands in physical block
@@ -204,13 +204,20 @@ def write_paged_kv(arena: jax.Array, block_table: jax.Array, pos: jax.Array,
     overshoot past the reservation) — their physical destination is pushed
     out of range and ``mode='drop'`` elides the scatter, so an idle slot or
     a rejected draft can never corrupt a live request's block.
+
+    ``live`` (B,) bool additionally drops rows frozen in-graph (a fused
+    decode horizon holds a finished row's state still while the other rows
+    keep stepping); ``None`` = all rows write.
     """
     p, bs = arena.shape[0], arena.shape[1]
     m = block_table.shape[1]
     blk = pos // bs
     phys = jnp.take_along_axis(block_table, jnp.clip(blk, 0, m - 1)[:, None],
                                axis=1)[:, 0]
-    dest = jnp.where((phys >= 0) & (blk < m), phys, p)
+    writable = (phys >= 0) & (blk < m)
+    if live is not None:
+        writable &= live
+    dest = jnp.where(writable, phys, p)
     return arena.at[dest, pos % bs].set(val.astype(arena.dtype), mode="drop")
 
 

@@ -94,7 +94,10 @@ def _causal_conv(x, w, b):
 
 
 def apply_rglru_layer(cfg, p: Dict[str, Any], x: jax.Array, *, rules,
-                      mode: str, cache=None) -> Tuple[jax.Array, Any]:
+                      mode: str, cache=None, live=None
+                      ) -> Tuple[jax.Array, Any]:
+    """``live`` (B,) bool (decode only) freezes a row's conv buffer and LRU
+    state in place — the fused decode-horizon's per-slot termination mask."""
     from repro.models.layers import apply_rmsnorm
     residual = x
     x = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
@@ -120,5 +123,8 @@ def apply_rglru_layer(cfg, p: Dict[str, Any], x: jax.Array, *, rules,
     out = constrain(out, ("batch", "seq", "embed"), rules)
     new_cache = None
     if mode in ("decode", "prefill"):
+        if live is not None and mode == "decode":
+            new_conv = jnp.where(live[:, None, None], new_conv, cache["conv"])
+            hf = jnp.where(live[:, None], hf, cache["h"])
         new_cache = {"conv": new_conv.astype(cfg.dtype), "h": hf}
     return residual + out, new_cache

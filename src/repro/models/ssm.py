@@ -146,8 +146,12 @@ def ssd_decode(x, dt, a, b, c, d_skip, hprev):
 
 
 def apply_ssm_layer(cfg, p: Dict[str, Any], x: jax.Array, *, rules,
-                    mode: str, cache=None) -> Tuple[jax.Array, Any]:
-    """Full Mamba-2 block: norm -> in_proj -> conv -> SSD -> gated out."""
+                    mode: str, cache=None, live=None) -> Tuple[jax.Array, Any]:
+    """Full Mamba-2 block: norm -> in_proj -> conv -> SSD -> gated out.
+
+    ``live`` (B,) bool (decode only) freezes a row's conv buffer and SSD
+    state in place — the fused decode-horizon's per-slot termination mask.
+    """
     from repro.models.layers import apply_rmsnorm
     d_inner, h, n, phd = _dims(cfg)
     residual = x
@@ -188,5 +192,8 @@ def apply_ssm_layer(cfg, p: Dict[str, Any], x: jax.Array, *, rules,
     out = constrain(out, ("batch", "seq", "embed"), rules)
     new_cache = None
     if mode in ("decode", "prefill"):
+        if live is not None and mode == "decode":
+            new_conv = jnp.where(live[:, None, None], new_conv, cache["conv"])
+            hf = jnp.where(live[:, None, None, None], hf, cache["state"])
         new_cache = {"conv": new_conv.astype(cfg.dtype), "state": hf}
     return residual + out, new_cache

@@ -142,7 +142,7 @@ def _write_prefill_cache(cache_kv, full, window: int, lengths=None):
 
 
 def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind,
-                block_table=None):
+                block_table=None, live=None):
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
     window = cfg.local_window if kind == "L" else 0
@@ -201,9 +201,9 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind,
             # serves the single-host tier, so it keeps the simple
             # full-repeat attention (no head_dim-sharded GQA variant).
             k_arena = attn_mod.write_paged_kv(cache["k"], block_table,
-                                              pos_b, k[:, 0])
+                                              pos_b, k[:, 0], live=live)
             v_arena = attn_mod.write_paged_kv(cache["v"], block_table,
-                                              pos_b, v[:, 0])
+                                              pos_b, v[:, 0], live=live)
             k_log = attn_mod.gather_paged_kv(k_arena, block_table)
             v_log = attn_mod.gather_paged_kv(v_arena, block_table)
             out = attn_mod.decode_attention(
@@ -225,6 +225,11 @@ def _apply_attn(cfg, p: Params, x, *, rules, mode, cache, pos, kind,
             # buffer (an idle slot left ticking, or speculative overshoot
             # past a request's horizon) must drop, not wrap-corrupt slot 0
             hit &= (pos_b < c)[:, None]
+        if live is not None:
+            # fused-horizon freeze: a finished row's KV must not move while
+            # the rest of the batch keeps decoding (a ring write would land
+            # inside the row's still-valid window)
+            hit &= live[:, None]
         hit = hit[:, :, None, None]
         k_cache = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
         v_cache = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
@@ -318,19 +323,20 @@ def layer_cache_abstract(cfg, kind: str, batch: int, cache_len: int,
 
 
 def apply_layer(cfg, kind: str, p: Params, x, *, rules, mode, cache, pos,
-                block_table=None):
+                block_table=None, live=None):
     aux = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
         x, new_cache = _apply_attn(cfg, p["mix"], x, rules=rules, mode=mode,
                                    cache=cache, pos=pos, kind=kind,
-                                   block_table=block_table)
+                                   block_table=block_table, live=live)
     elif kind == "M":
         x, new_cache = ssm_mod.apply_ssm_layer(cfg, p["mix"], x, rules=rules,
-                                               mode=mode, cache=cache)
+                                               mode=mode, cache=cache,
+                                               live=live)
     elif kind == "R":
         x, new_cache = hybrid_mod.apply_rglru_layer(cfg, p["mix"], x,
                                                     rules=rules, mode=mode,
-                                                    cache=cache)
+                                                    cache=cache, live=live)
     else:
         raise ValueError(kind)
     if cfg.d_ff > 0:
@@ -463,7 +469,8 @@ def _maybe_remat(cfg, fn, mode):
     return jax.checkpoint(fn, policy=pol)
 
 
-def _run_stack(cfg, params, x, *, rules, mode, caches, pos, block_table=None):
+def _run_stack(cfg, params, x, *, rules, mode, caches, pos, block_table=None,
+               live=None):
     unit, n_groups, tail = split_layers(cfg)
     aux0 = jnp.zeros((), jnp.float32)
 
@@ -479,7 +486,7 @@ def _run_stack(cfg, params, x, *, rules, mode, caches, pos, block_table=None):
             x, nc, a = apply_layer(
                 cfg, kind, gp[slot], x, rules=rules, mode=mode,
                 cache=None if gc is None else gc[slot], pos=pos,
-                block_table=block_table)
+                block_table=block_table, live=live)
             new_gc[slot] = nc
             aux = aux + a
         x = constrain(x, ("batch", "seq", "embed"), rules)
@@ -501,7 +508,7 @@ def _run_stack(cfg, params, x, *, rules, mode, caches, pos, block_table=None):
         x, nc, a = apply_layer(
             cfg, kind, params["tail"][name], x, rules=rules, mode=mode,
             cache=None if caches is None else caches["tail"][name], pos=pos,
-            block_table=block_table)
+            block_table=block_table, live=live)
         new_tail[name] = nc
         aux = aux + a
 
@@ -552,6 +559,20 @@ def forward(cfg, params, tokens, *, rules, prefix_embeds=None, mode="train",
     return logits, new_caches, aux
 
 
+def greedy_token(cfg, logits):
+    """THE greedy-decoding argmax, shared by every decode mode.
+
+    Masks vocab padding before the argmax; works over any leading dims
+    (``logits`` (..., V_padded) -> (...) int32).  Single definition on
+    purpose: the serving engine's bit-exactness guarantees (sequential ==
+    verify == horizon) rest on all three computing the same token — a
+    drifted copy would silently break the whole exactness matrix.
+    """
+    valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    return jnp.argmax(jnp.where(valid, logits, -jnp.inf),
+                      axis=-1).astype(jnp.int32)
+
+
 def verify_decode(cfg, params, caches, tokens, *, rules):
     """Speculative verify: score S = k+1 tokens in ONE program, accept the
     longest greedy-matching draft prefix, roll rejected state back.
@@ -593,9 +614,7 @@ def verify_decode(cfg, params, caches, tokens, *, rules):
 
     def body(c, tok):
         logits, c2 = decode_step(cfg, params, c, tok[:, None], rules=rules)
-        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
-        y = jnp.argmax(jnp.where(valid, logits[:, 0], -jnp.inf),
-                       axis=-1).astype(jnp.int32)
+        y = greedy_token(cfg, logits[:, 0])
         rec = [leaf for path, leaf in
                jax.tree_util.tree_flatten_with_path(c2)[0]
                if leaf_kind(path) == "state"]
@@ -651,11 +670,19 @@ def verify_decode(cfg, params, caches, tokens, *, rules):
     return new_caches, ys, n_new
 
 
-def decode_step(cfg, params, caches, token, pos=None, *, rules):
+def decode_step(cfg, params, caches, token, pos=None, *, rules, live=None):
     """token: (B, 1) int32; pos: () or (B,) int32 absolute position(s),
     defaulting to the per-slot ``pos`` vector carried in the cache tree.
 
-    Returns (logits (B, 1, V_padded), new_caches) where the new cache's
+    ``live`` (B,) bool freezes rows in-graph: a non-live row's KV write,
+    recurrent-state update and ``pos`` advance are all masked out, so its
+    cache tree is byte-identical before and after the step while the live
+    rows step normally (the fused decode-horizon's per-slot termination —
+    EOS or an exhausted budget mid-horizon must not perturb any state).
+    ``None`` (the default) means every row is live and the step is exactly
+    the classic one-token decode.
+
+    Returns (logits (B, 1, V_padded), new_caches) where each live row's
     ``pos`` advanced by one.
     """
     b = token.shape[0]
@@ -668,14 +695,73 @@ def decode_step(cfg, params, caches, token, pos=None, *, rules):
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x, new_caches, _ = _run_stack(cfg, params, x, rules=rules, mode="decode",
                                   caches=caches, pos=pos,
-                                  block_table=block_table)
+                                  block_table=block_table, live=live)
     logits = logits_from_hidden(cfg, params, x, rules)
+    advance = live
     if block_table is not None:
         # paged tree: the block table rides along unchanged, and only
         # mapped slots advance — an unmapped (released) slot's pos stays
         # frozen so its block index can never creep out of range
         new_caches["block_table"] = block_table
-        new_caches["pos"] = jnp.where(block_table[:, 0] >= 0, pos + 1, pos)
-    else:
-        new_caches["pos"] = pos + 1
+        mapped = block_table[:, 0] >= 0
+        advance = mapped if advance is None else advance & mapped
+    new_caches["pos"] = (pos + 1 if advance is None
+                         else jnp.where(advance, pos + 1, pos))
     return logits, new_caches
+
+
+def decode_horizon(cfg, params, caches, tokens, budget, *, rules,
+                   horizon: int, eos_id=None):
+    """Fused multi-step decode: ``horizon`` greedy steps in ONE program.
+
+    The host pays one dispatch (and one device→host sync) per *horizon*
+    instead of per token — the paper's re-execute arithmetic applied to the
+    generation loop itself: control stays resident on the device
+    (``lax.scan``) and the boundary is crossed once per H tokens.
+
+    tokens: (B, 1) int32 — each slot's last accepted token (the in-graph
+    greedy feedback starts from it); budget: (B,) int32 — tokens row b may
+    emit this horizon (``min(remaining max_new, remaining cache, H)``;
+    0 holds the row frozen for the whole horizon, e.g. an empty slot).
+
+    Per-slot termination is masked in-graph: a row freezes the step after
+    it emits ``eos_id`` or exhausts its budget — its KV/recurrent state and
+    ``pos`` stop moving (``decode_step(live=...)``) while the other rows
+    keep decoding, so a mid-horizon finish perturbs nothing.
+
+    Exactness by construction: the scan body is the SAME per-token
+    :func:`decode_step` the sequential engine dispatches, and the fed-back
+    token is the same vocab-masked argmax, so every live row's logits,
+    emitted tokens and cache bytes are bit-identical to stepping one token
+    at a time.
+
+    Returns ``(new_caches, events)`` — the device-side event buffer read
+    back with ONE transfer instead of per-step hostcalls:
+
+      * ``events["tokens"]``   (B, H) int32: token emitted at each step
+        (frozen rows repeat their last token; slice by ``n_emitted``);
+      * ``events["n_emitted"]`` (B,) int32: valid tokens for row b — also
+        its finish step when it terminated mid-horizon;
+      * ``events["occupancy"]`` (H,) f32: fraction of rows live per step.
+    """
+    b = tokens.shape[0]
+
+    def body(carry, _):
+        caches, tok, emitted, live = carry
+        logits, caches2 = decode_step(cfg, params, caches, tok, rules=rules,
+                                      live=live)
+        y = jnp.where(live, greedy_token(cfg, logits[:, 0]), tok[:, 0])
+        emitted = emitted + live.astype(jnp.int32)
+        next_live = live & (emitted < budget)
+        if eos_id is not None:
+            next_live &= y != eos_id
+        occ = jnp.mean(live.astype(jnp.float32))
+        return (caches2, y[:, None], emitted, next_live), (y, occ)
+
+    live0 = budget > 0
+    carry0 = (caches, tokens, jnp.zeros((b,), jnp.int32), live0)
+    (new_caches, _, n_emitted, _), (ys, occ) = jax.lax.scan(
+        body, carry0, None, length=horizon)
+    events = {"tokens": jnp.transpose(ys), "n_emitted": n_emitted,
+              "occupancy": occ}
+    return new_caches, events

@@ -313,6 +313,32 @@ def make_verify_step(cfg, rules):
     return verify_step
 
 
+def make_decode_horizon_step(cfg, rules, horizon: int, eos_id=None):
+    """decode_horizon(params, caches, tokens (B, 1), budget (B,)) ->
+    (caches, events).
+
+    The fused generation loop: ``horizon`` greedy decode iterations in ONE
+    program execution via ``lax.scan`` with in-graph feedback
+    (:func:`repro.models.transformer.decode_horizon`).  Per-slot
+    termination (EOS / exhausted budget) is masked in-graph, and the
+    emitted tokens / per-slot finish steps / occupancy come back as a
+    device-side event buffer — one host round trip per horizon instead of
+    one dispatch plus several hostcalls per token.  Pure array ops, so the
+    program serializes into a ProgramStore like the other serving
+    programs; ``horizon`` and ``eos_id`` are closure-captured statics and
+    MUST be folded into the spec's fingerprint context.
+    """
+    assert not cfg.is_encdec, "decoder-only serving path"
+    assert horizon >= 2, horizon
+
+    def decode_horizon_step(params, caches, tokens, budget):
+        return transformer.decode_horizon(cfg, params, caches, tokens,
+                                          budget, rules=rules,
+                                          horizon=horizon, eos_id=eos_id)
+
+    return decode_horizon_step
+
+
 def _spec_context(cfg, rules, *extra) -> str:
     """Fingerprint context for closure-captured configuration: the frozen
     config dataclass repr, the sharding rules and any extra scalars."""
@@ -320,8 +346,27 @@ def _spec_context(cfg, rules, *extra) -> str:
                     + [repr(e) for e in extra])
 
 
+def _horizon_spec(cfg, rules, context, p_abstract, c_abstract, tok_decode,
+                  batch, horizon, eos_id):
+    """The shared ``decode_horizon`` ProgramSpec of both serving-engine
+    builders (dense and paged) — one definition keeps their fingerprint
+    contexts in lockstep, so a context change can never drift between the
+    two cache layouts and resurrect a stale store entry."""
+    from repro.core.program_store import ProgramSpec
+    from repro.sharding import LogicalArray
+    budget = LogicalArray((batch,), jnp.int32, ("batch",))
+    return ProgramSpec(
+        key="decode_horizon",
+        fn=make_decode_horizon_step(cfg, rules, horizon, eos_id),
+        abstract_args=(p_abstract, c_abstract, tok_decode, budget),
+        donate_argnums=(1,),
+        context=context + "|" + repr((("horizon", horizon),
+                                      ("eos", eos_id))))
+
+
 def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
-                        prefill_len: int, spec_k: Optional[int] = None):
+                        prefill_len: int, spec_k: Optional[int] = None,
+                        horizon: Optional[int] = None, eos_id=None):
     """The serving engine's programs as typed ProgramSpecs.
 
     ``prefill`` admits a cold-start burst over the whole batch,
@@ -331,8 +376,12 @@ def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
     execution (speculative decoding) — and the cache layout switches to
     full-length (``ring=False``) windowed buffers, because verify rollback
     needs rejected writes to land at absolute slots beyond the truncated
-    ``pos``, never inside a live ring window.  All programs donate the
-    cache tree (argnum 1).
+    ``pos``, never inside a live ring window.  With ``horizon`` >= 2 a
+    ``decode_horizon`` program fuses that many greedy steps into one
+    dispatch (in-graph feedback + per-slot termination masking); its
+    closure-captured ``(horizon, eos_id)`` statics are folded into its
+    fingerprint context so a ProgramStore never confuses two horizon
+    lengths.  All programs donate the cache tree (argnum 1).
     """
     from repro.core.program_store import ProgramSpec
     from repro.sharding import LogicalArray
@@ -376,13 +425,18 @@ def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
             key="verify", fn=make_verify_step(cfg, rules),
             abstract_args=(p_abstract, c_abstract, tok_verify),
             donate_argnums=(1,), context=context)
+    if horizon is not None and horizon >= 2:
+        specs["decode_horizon"] = _horizon_spec(
+            cfg, rules, context, p_abstract, c_abstract, tok_decode,
+            batch, horizon, eos_id)
     return specs
 
 
 def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
                               prefill_len: int, kv_block: int,
                               arena_blocks: int,
-                              spec_k: Optional[int] = None):
+                              spec_k: Optional[int] = None,
+                              horizon: Optional[int] = None, eos_id=None):
     """The paged serving engine's programs as typed ProgramSpecs.
 
     ``prefill_slot`` admits one request into the arena blocks its slot's
@@ -424,6 +478,10 @@ def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
             key="verify", fn=make_verify_step(cfg, rules),
             abstract_args=(p_abstract, c_abstract, tok_verify),
             donate_argnums=(1,), context=context)
+    if horizon is not None and horizon >= 2:
+        specs["decode_horizon"] = _horizon_spec(
+            cfg, rules, context, p_abstract, c_abstract, tok_decode,
+            batch, horizon, eos_id)
     return specs
 
 
@@ -443,10 +501,9 @@ def train_program_spec(cfg, rules, opt_cfg: AdamWConfig, abstract_state,
 
 
 def _greedy(cfg, logits):
-    # mask vocab padding before argmax
-    valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
-    masked = jnp.where(valid, logits, -jnp.inf)
-    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    # the one shared greedy argmax — transformer.greedy_token — so serve /
+    # verify / horizon can never drift apart on vocab-padding or ties
+    return transformer.greedy_token(cfg, logits)
 
 
 def init_train_state(cfg, key, opt_cfg: Optional[AdamWConfig] = None):

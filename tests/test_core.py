@@ -363,6 +363,39 @@ def test_hostcall_user_registration_and_value_return():
     assert seen == [2.0]
 
 
+def test_hostcall_batch_one_round_trip_many_calls():
+    """CALL_BATCH coalesces several calls into one dispatch: every entry
+    lands in its own channel exactly as if dispatched separately."""
+    from repro.core.hostcall import (CALL_BATCH, CALL_METRIC,
+                                     CALL_STEP_REPORT)
+    hct = HostCallTable()
+    hct.dispatch(CALL_BATCH, [(CALL_METRIC, 2, 1.5),
+                              (CALL_METRIC, 3, 0.5),
+                              (CALL_METRIC, 2, 2.5),
+                              (CALL_STEP_REPORT, 7, 0.01)])
+    assert hct.metrics[2] == [1.5, 2.5]
+    assert hct.metrics[3] == [0.5]
+    assert hct.step_times == [(7, 0.01)]
+
+
+def test_hostcall_drain_metrics_resets_channels_and_keeps_excluded():
+    """drain_metrics hands back every non-kept channel whole and replaces
+    it with a fresh list — no per-code rescan, new codes covered
+    automatically, kept channels untouched."""
+    from repro.core.hostcall import CALL_METRIC
+    hct = HostCallTable()
+    for code, val in ((1, 10.0), (2, 20.0), (2, 21.0), (4, 99.0), (9, 1.0)):
+        hct.dispatch(CALL_METRIC, code, val)
+    drained = hct.drain_metrics(keep=(4,))
+    assert drained == {1: [10.0], 2: [20.0, 21.0], 9: [1.0]}
+    assert hct.metrics[1] == [] and hct.metrics[2] == []
+    assert hct.metrics[9] == []          # a "new" code needed no code list
+    assert hct.metrics[4] == [99.0]      # kept channel untouched
+    # the handed-back lists are the originals, not aliases of the live ones
+    hct.dispatch(CALL_METRIC, 2, 30.0)
+    assert drained[2] == [20.0, 21.0]
+
+
 def test_hostcall_syscall_range_write(tmp_path):
     hct = HostCallTable()
     f = (tmp_path / "out.bin").open("wb")

@@ -1,0 +1,242 @@
+"""Fused decode-horizon tests (ISSUE 5).
+
+The properties the horizon subsystem must hold:
+
+  * token-for-token exactness vs the step-at-a-time engine for every
+    model family, paged and unpaged — the horizon scan reuses the same
+    per-token decode step, so fusing H iterations into one dispatch may
+    change ONLY the dispatch count, never the stream;
+  * a request finishing mid-horizon (EOS or budget) freezes its row
+    in-graph without perturbing the other slots;
+  * the adaptive policy shrinks to single-step decode while an eligible
+    request waits in the queue (admission is never held hostage for a
+    whole horizon), then resumes fusing;
+  * the ``decode_horizon`` program serializes into the ProgramStore and
+    warm-boots by deserialization (``compile_s == 0``);
+  * per-step telemetry arrives as ONE aggregated hostcall dispatch and
+    ``drain_completed`` trims every engine channel generically.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ProgramStore
+from repro.launch.serve import (METRIC_DECODE_MS, METRIC_HORIZON_TOKENS,
+                                METRIC_OCCUPANCY, ServingEngine)
+
+FAMILY_ARCHS = ["qwen3-0.6b", "gemma3-4b", "mamba2-130m",
+                "recurrentgemma-2b", "olmoe-1b-7b"]
+
+
+def _submit_trace(eng, rng):
+    """Two immediate requests with staggered budgets: one finishes
+    mid-horizon (its row freezes) while the other keeps decoding."""
+    return [eng.submit(rng.integers(1, eng.cfg.vocab_size, size=n),
+                       max_new=m)
+            for n, m in ((4, 5), (7, 11))]
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+@pytest.mark.parametrize("paged", [False, True], ids=["unpaged", "paged"])
+def test_horizon_token_identical_to_sequential(arch, paged):
+    """The 5-family x {paged, unpaged} exactness matrix: the fused engine
+    emits exactly the sequential engine's streams, in fewer dispatches."""
+    kw = dict(reduced=True, batch=2, max_len=48, clock="step")
+    if paged:
+        kw.update(paged=True, kv_block=8, arena_blocks=12)
+    base = ServingEngine(arch, **kw)
+    fused = ServingEngine(arch, params=base.params, horizon=4, **kw)
+    base_reqs = _submit_trace(base, np.random.default_rng(0))
+    fused_reqs = _submit_trace(fused, np.random.default_rng(0))
+    bs = base.run()
+    fs = fused.run()
+    for b, f in zip(base_reqs, fused_reqs):
+        assert f.generated == b.generated, (arch, paged, b.generated,
+                                            f.generated)
+    assert fs["horizon_steps"] >= 1, fs
+    assert fs["decode_steps"] < bs["decode_steps"], (fs, bs)
+    assert fs["dispatches_per_token"] < bs["dispatches_per_token"]
+    # fused and sequential decode paths emitted the same token count
+    assert fs["decode_tokens"] == bs["decode_tokens"], (fs, bs)
+
+
+def test_mid_horizon_eos_freezes_row_without_perturbing_others():
+    """EOS inside a horizon: the hitting row stops exactly at its first
+    EOS (in-graph termination mask) and the surviving row's stream is
+    untouched by its neighbour's freeze."""
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                        seed=11, clock="step")
+    prompt_a, prompt_b = np.arange(1, 6), np.arange(3, 7)
+    ra = eng.submit(prompt_a, max_new=8)
+    rb = eng.submit(prompt_b, max_new=8)
+    eng.run()
+    eos = ra.generated[2]
+    first_hit = ra.generated.index(eos)
+
+    fused = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                          params=eng.params, eos_id=eos, clock="step",
+                          horizon=8)
+    fa = fused.submit(prompt_a, max_new=8)
+    fb = fused.submit(prompt_b, max_new=8)
+    stats = fused.run()
+    assert fa.generated == ra.generated[:first_hit + 1]
+    assert stats["horizon_steps"] >= 1      # the EOS fell inside a horizon
+    # the neighbour matches the sequential engine run with the SAME eos
+    seq = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                        params=eng.params, eos_id=eos, clock="step")
+    sa = seq.submit(prompt_a, max_new=8)
+    sb = seq.submit(prompt_b, max_new=8)
+    seq.run()
+    assert fa.generated == sa.generated
+    assert fb.generated == sb.generated
+
+
+def test_mid_horizon_admission_adaptive_shrink():
+    """More requests than slots: while a request waits in the queue the
+    engine shrinks to single-step decode (admission latency never pays a
+    whole horizon), fuses again once the queue drains, and every stream
+    stays exact."""
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=64,
+                        clock="step", horizon=4)
+    rng = np.random.default_rng(5)
+    reqs = [eng.submit(rng.integers(1, 500, size=int(rng.integers(2, 8))),
+                       max_new=m)
+            for m in (4, 9, 8, 7)]
+    stats = eng.run()
+    assert stats["requests"] == 4
+    assert stats["refill_admissions"] >= 1      # admitted into a live batch
+    progs = eng.syscore.report()["programs"]
+    # both decode paths ran: plain steps while the queue was non-empty,
+    # fused horizons after it drained
+    assert progs["decode"]["executions"] >= 1, progs["decode"]
+    assert progs["decode_horizon"]["executions"] >= 1
+    for r in reqs:
+        assert r.generated == eng.reference_generate(r.prompt, r.max_new)
+
+
+def test_saturated_engine_still_fuses_when_admission_is_impossible():
+    """A backed-up queue must not disable fusion when no admission could
+    happen anyway: with no EOS and every slot's remaining budget larger
+    than the horizon, no slot can free mid-horizon, so the engine fuses
+    even while a request waits — the sustained-load regime fusion
+    targets."""
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=64,
+                        clock="step", horizon=4)
+    rng = np.random.default_rng(7)
+    reqs = [eng.submit(rng.integers(1, 500, size=4), max_new=13)
+            for _ in range(3)]
+    # two engine iterations with the third request still queued: both
+    # slots hold budgets > horizon, so both advances must be fused
+    eng.run(max_steps=2)
+    assert len(eng.queue) == 1              # the waiter is still waiting
+    assert eng.horizon_steps == 2, (eng.horizon_steps, eng.decode_steps)
+    eng.run()                               # drain; exactness end to end
+    for r in reqs:
+        assert r.generated == eng.reference_generate(r.prompt, r.max_new)
+
+
+def test_budget_exhaustion_freezes_row_not_horizon():
+    """A row whose remaining max_new is smaller than H gets a budget that
+    freezes it mid-horizon; tokens past the budget are never emitted."""
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=64,
+                        clock="step", horizon=8)
+    rng = np.random.default_rng(2)
+    short = eng.submit(rng.integers(1, 500, size=4), max_new=3)
+    long = eng.submit(rng.integers(1, 500, size=5), max_new=12)
+    eng.run()
+    assert len(short.generated) == 3
+    assert len(long.generated) == 12
+    assert short.generated == eng.reference_generate(short.prompt, 3)
+    assert long.generated == eng.reference_generate(long.prompt, 12)
+
+
+def test_spec_fallback_routes_through_horizon():
+    """spec_k + horizon composition: a verify iteration with no proposals
+    falls back to a fused horizon, not a single decode step, and the
+    stream stays exact."""
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=64,
+                        clock="step", spec_k=3, horizon=4)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(1, eng.cfg.vocab_size, size=n), 10)
+            for n in (4, 6)]
+    stats = eng.run()
+    assert stats["horizon_steps"] >= 1, stats
+    for r in reqs:
+        assert r.generated == eng.reference_generate(r.prompt, r.max_new)
+
+
+def test_horizon_metrics_flow_as_one_aggregated_dispatch():
+    """Telemetry schema: one METRIC_DECODE_MS entry per dispatch, one
+    METRIC_HORIZON_TOKENS entry per horizon, one METRIC_OCCUPANCY entry
+    per *executed in-graph step* (the channel keeps its per-decode-step
+    weighting when fused and single-step phases mix), step reports
+    matching dispatch count — all via the CALL_BATCH aggregated
+    hostcall."""
+    eng = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=64,
+                        clock="step", horizon=4)
+    rng = np.random.default_rng(1)
+    eng.submit(rng.integers(1, 500, size=4), 9)
+    stats = eng.run()
+    metrics = eng.syscore.hostcalls.metrics
+    assert len(metrics[METRIC_DECODE_MS]) == stats["decode_steps"]
+    # one active slot: every executed in-graph step emits exactly one
+    # token, so the occupancy channel has one 0.5-valued entry per token
+    assert len(metrics[METRIC_OCCUPANCY]) == stats["decode_tokens"]
+    assert all(o == 0.5 for o in metrics[METRIC_OCCUPANCY])
+    assert len(metrics[METRIC_HORIZON_TOKENS]) == stats["horizon_steps"]
+    assert sum(metrics[METRIC_HORIZON_TOKENS]) == stats["horizon_tokens"]
+    assert eng.syscore.report()["hostcalls"]["step_reports"] == \
+        stats["decode_steps"]
+    # drain trims the new channels too (no hand-maintained code list)
+    eng.drain_completed()
+    assert metrics[METRIC_HORIZON_TOKENS] == []
+    assert metrics[METRIC_DECODE_MS] == []
+
+
+def test_horizon_warm_boot_from_store_is_load_only_and_token_exact(tmp_path):
+    """decode_horizon is a pure array program: a warm-store boot installs
+    it by deserialization (load_s > 0, compile_s == 0) and the rebooted
+    engine stays token-exact."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(1, 500, size=5)
+    cold = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                         clock="step", horizon=4,
+                         store=ProgramStore(tmp_path))
+    cold_req = cold.submit(prompt, max_new=8)
+    cold.run()
+    assert cold.programs["decode_horizon"].program.source == "compile"
+    if cold.syscore.store.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+
+    warm = ServingEngine("qwen3-0.6b", reduced=True, batch=2, max_len=32,
+                         clock="step", horizon=4,
+                         store=ProgramStore(tmp_path))
+    progs = warm.syscore.report()["programs"]
+    assert progs["decode_horizon"]["source"] == "store", progs
+    assert progs["decode_horizon"]["load_s"] > 0
+    assert progs["decode_horizon"]["compile_s"] == 0
+    warm_req = warm.submit(prompt, max_new=8)
+    warm.run()
+    assert warm_req.generated == cold_req.generated
+
+
+def test_horizon_length_is_part_of_the_program_fingerprint(tmp_path):
+    """Two horizon lengths must never collide in a ProgramStore: the
+    closure-captured H is folded into the fingerprint (spec context AND
+    scalar closure cells), so an H=4 store entry cannot satisfy an H=8
+    boot."""
+    from repro.models import registry
+    from repro.sharding import make_rules
+    from repro import steps as steps_lib
+    cfg = registry.get_config("qwen3-0.6b", reduced=True)
+    rules = make_rules()
+    kw = dict(batch=2, max_len=32, prefill_len=16)
+    s4 = steps_lib.serve_program_specs(cfg, rules, horizon=4, **kw)
+    s8 = steps_lib.serve_program_specs(cfg, rules, horizon=8, **kw)
+    s4e = steps_lib.serve_program_specs(cfg, rules, horizon=4, eos_id=7,
+                                        **kw)
+    fp4 = s4["decode_horizon"].fingerprint
+    assert fp4 != s8["decode_horizon"].fingerprint
+    assert fp4 != s4e["decode_horizon"].fingerprint
+    # deterministic across builder invocations (storable across reboots)
+    assert fp4 == steps_lib.serve_program_specs(
+        cfg, rules, horizon=4, **kw)["decode_horizon"].fingerprint
