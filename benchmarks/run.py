@@ -25,13 +25,14 @@ def main() -> None:
     from benchmarks import (bench_boot, bench_fused, bench_hostcall,
                             bench_load_exec, bench_paging, bench_pipeline,
                             bench_placement, bench_roofline, bench_spec,
-                            bench_treeload)
+                            bench_tp, bench_treeload)
     modules = [
         ("load_exec(Table1+Fig2)", bench_load_exec),
         ("boot(Table1-store)", bench_boot),
         ("paging(S3.4-kv)", bench_paging),
         ("spec(Table1-decode)", bench_spec),
         ("fused(S3.3-horizon)", bench_fused),
+        ("tp(S3-sharded)", bench_tp),
         ("placement(Table2)", bench_placement),
         ("hostcall(S3.5)", bench_hostcall),
         ("treeload(Fig2)", bench_treeload),

@@ -105,6 +105,13 @@ class ProgramSpec:
     idiomatic content.  Equality and hashing go by content fingerprint
     (the generated dataclass ``__eq__`` would choke on the dict-valued
     abstract-arg trees).
+
+    ``out_logical`` optionally carries the OUTPUT pytree as LogicalArrays:
+    when the compiling Syscore holds a mesh, it resolves them against its
+    sharding rules into explicit ``out_shardings`` (pinning e.g. the
+    donated cache's output sharding to its input sharding, so dispatches
+    never reshard).  Mesh-less compiles ignore it.  ``out_shardings``
+    remains the escape hatch for pre-resolved shardings.
     """
     key: str
     fn: Callable
@@ -112,6 +119,7 @@ class ProgramSpec:
     donate_argnums: Tuple[int, ...] = ()
     out_shardings: Any = None
     context: str = ""
+    out_logical: Any = None
 
     def __eq__(self, other):
         return (isinstance(other, ProgramSpec)
@@ -134,6 +142,8 @@ class ProgramSpec:
                 h.update(_leaf_desc(path, leaf).encode())
             h.update(repr(tuple(self.donate_argnums)).encode())
             h.update(repr(self.out_shardings).encode())
+            if self.out_logical is not None:
+                h.update(repr(self.out_logical).encode())
             h.update(self.context.encode())
             cached = h.hexdigest()
             object.__setattr__(self, "_fingerprint", cached)

@@ -154,9 +154,18 @@ class Syscore:
             from repro.compat import set_mesh
             shardings = tree_shardings(spec.abstract_args, self.rules,
                                        self.mesh)
+            out_shardings = spec.out_shardings
+            if out_shardings is None and \
+                    getattr(spec, "out_logical", None) is not None:
+                # resolve the spec's logical output tree against this
+                # syscore's rules + mesh: the donated cache keeps its input
+                # sharding (no per-dispatch reshard) and small host-read
+                # outputs come back replicated
+                out_shardings = tree_shardings(spec.out_logical, self.rules,
+                                               self.mesh)
             with set_mesh(self.mesh):
                 jf = jax.jit(spec.fn, in_shardings=shardings,
-                             out_shardings=spec.out_shardings,
+                             out_shardings=out_shardings,
                              donate_argnums=spec.donate_argnums)
                 lowered = jf.lower(*structs)
                 t1 = time.perf_counter()

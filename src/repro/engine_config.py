@@ -1,0 +1,231 @@
+"""Typed serving-engine configuration (Executor API v3).
+
+The engine grew one keyword argument per subsystem until its constructor
+carried 18 of them; this module replaces that surface with one frozen
+:class:`EngineConfig` composed of per-subsystem sub-configs:
+
+  * :class:`PagingConfig`  — the paged KV-cache arena (repro.core.paging);
+  * :class:`SpecConfig`    — speculative decoding (draft k, proposer n-gram);
+  * :class:`HorizonConfig` — fused multi-step decode horizons;
+  * :class:`ShardConfig`   — tensor-parallel serving: the mesh the five
+    hot-loaded programs compile against and the axis model/KV shards map to.
+
+Everything here is a plain value object: frozen, hashable, and
+dict-round-trippable (``to_dict`` / ``from_dict``) so benchmarks, tests and
+launch scripts can construct engines declaratively from JSON.  Runtime
+objects (a live mesh, a params tree, an open :class:`ProgramStore`) stay
+constructor arguments of ``ServingEngine`` — a config describes *what* to
+build, never holds device state.
+
+The config is also the single source of the program fingerprint context:
+:meth:`EngineConfig.program_context` serializes exactly the fields that
+change the compiled serving programs (shapes, cache layout, paging
+geometry, speculative width), and nothing host-side (clock, queue bound,
+seed, store location), so two engines differing only in scheduling policy
+share ProgramStore entries while any program-shape change can never
+collide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+__all__ = ["PagingConfig", "SpecConfig", "HorizonConfig", "ShardConfig",
+           "EngineConfig"]
+
+
+@dataclass(frozen=True)
+class PagingConfig:
+    """Paged KV-cache arena geometry (repro.core.paging).
+
+    kv_block: tokens per physical KV block (must divide ``max_len``).
+    arena_blocks: device-resident physical blocks; ``None`` fits the whole
+        batch (``batch * max_len / kv_block`` — no memory pressure).
+    timeslice: optional preemptive round-robin — active requests that have
+        decoded this many tokens since (re)admission are preempted when a
+        queued request cannot fit the arena.  Host-side policy only; does
+        not enter the program fingerprint.
+    """
+    kv_block: int = 8
+    arena_blocks: Optional[int] = None
+    timeslice: Optional[int] = None
+
+    def resolved_arena_blocks(self, batch: int, max_len: int) -> int:
+        assert max_len % self.kv_block == 0, (max_len, self.kv_block)
+        return (self.arena_blocks if self.arena_blocks is not None
+                else batch * (max_len // self.kv_block))
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding: ``k`` drafts per verify execution, proposed by
+    a suffix ``ngram`` prompt-lookup over each request's own history."""
+    k: int = 3
+    ngram: int = 2
+
+    def __post_init__(self):
+        assert self.k >= 1, self.k
+
+
+@dataclass(frozen=True)
+class HorizonConfig:
+    """Fused decode horizons: up to ``length`` greedy decode iterations per
+    ``decode_horizon`` dispatch.  ``length`` < 2 is meaningless (that is
+    plain decode); construct no HorizonConfig at all instead."""
+    length: int = 4
+
+    def __post_init__(self):
+        assert self.length >= 2, self.length
+
+
+@dataclass(frozen=True)
+class ShardConfig:
+    """Tensor-parallel serving mesh.
+
+    n_devices: devices on the ``axis`` mesh axis; 1 = single-device (no
+        mesh, the classic engine).  The engine builds the mesh via
+        ``repro.launch.mesh.serving_mesh`` unless a live mesh is passed.
+    axis: the physical mesh axis name the model-parallel rules map to.
+    fsdp: use the FSDP rule variant (weights additionally sharded over the
+        data axes; only meaningful on meshes that have them).
+    """
+    n_devices: int = 1
+    axis: str = "model"
+    fsdp: bool = False
+
+    def __post_init__(self):
+        assert self.n_devices >= 1, self.n_devices
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Everything a ``ServingEngine`` is, as one frozen value object.
+
+    Scalar fields mirror the legacy constructor; subsystems are opt-in via
+    their sub-config (``None`` = off).  ``shard`` always exists — the
+    default ShardConfig() is the 1-device engine.
+    """
+    reduced: bool = True
+    batch: int = 4
+    max_len: int = 128
+    prefill_len: Optional[int] = None     # None -> max_len // 2
+    eos_id: Optional[int] = None
+    seed: int = 0
+    max_queue: int = 64
+    clock: str = "wall"                   # "wall" | "step"
+    group_prefill: bool = False
+    store_dir: Optional[str] = None       # shorthand for ProgramStore(dir)
+    paging: Optional[PagingConfig] = None
+    spec: Optional[SpecConfig] = None
+    horizon: Optional[HorizonConfig] = None
+    shard: ShardConfig = ShardConfig()
+
+    def __post_init__(self):
+        assert self.clock in ("wall", "step"), self.clock
+        assert 0 < self.resolved_prefill_len < self.max_len, \
+            (self.prefill_len, self.max_len)
+        if self.paging is not None:
+            assert self.max_len % self.paging.kv_block == 0, \
+                (self.max_len, self.paging.kv_block)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def resolved_prefill_len(self) -> int:
+        return self.prefill_len or self.max_len // 2
+
+    @property
+    def paged(self) -> bool:
+        return self.paging is not None
+
+    @property
+    def spec_k(self) -> Optional[int]:
+        return self.spec.k if self.spec is not None else None
+
+    @property
+    def horizon_length(self) -> Optional[int]:
+        return self.horizon.length if self.horizon is not None else None
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- fingerprint contexts ------------------------------------------------
+    def program_context(self) -> str:
+        """The program-shape half of this config, as a deterministic string
+        folded into every serving ProgramSpec's fingerprint context.
+
+        Includes exactly what changes the compiled programs: batch / cache
+        geometry, the paged-arena shape, and the speculative width (which
+        flips windowed layers to non-ring buffers).  Excludes host-side
+        scheduling (clock, max_queue, seed, group_prefill, timeslice,
+        proposer n-gram, store location) so engines differing only in
+        policy share store entries — and excludes the shard config: the
+        ProgramStore already keys on the mesh shape, and the sharding
+        rules enter the context beside this string.
+        """
+        items = [("batch", self.batch), ("max_len", self.max_len),
+                 ("prefill_len", self.resolved_prefill_len)]
+        if self.paging is not None:
+            items += [("paged", True), ("kv_block", self.paging.kv_block),
+                      ("arena_blocks", self.paging.resolved_arena_blocks(
+                          self.batch, self.max_len))]
+        if self.spec is not None:
+            items += [("spec", self.spec.k)]
+        return repr(tuple(items))
+
+    def horizon_context(self) -> str:
+        """Extra context for the ``decode_horizon`` program only: its
+        closure-captured statics (H, eos) — folded on top of
+        :meth:`program_context` so two horizon lengths never collide."""
+        return repr((("horizon", self.horizon_length),
+                     ("eos", self.eos_id)))
+
+    # -- dict round trip -----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain nested dict (JSON-serializable); inverse of from_dict."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineConfig":
+        d = dict(d)
+        for key, sub in (("paging", PagingConfig), ("spec", SpecConfig),
+                         ("horizon", HorizonConfig), ("shard", ShardConfig)):
+            v = d.get(key)
+            if isinstance(v, dict):
+                d[key] = sub(**v)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise TypeError(f"unknown EngineConfig fields: {sorted(unknown)}")
+        return cls(**d)
+
+    # -- legacy kwargs shim ----------------------------------------------------
+    @classmethod
+    def from_legacy_kwargs(cls, *, reduced: bool = True, batch: int = 4,
+                           max_len: int = 128,
+                           prefill_len: Optional[int] = None,
+                           eos_id: Optional[int] = None, seed: int = 0,
+                           max_queue: int = 64, clock: str = "wall",
+                           group_prefill: bool = False, store_dir=None,
+                           paged: bool = False, kv_block: int = 8,
+                           arena_blocks: Optional[int] = None,
+                           timeslice: Optional[int] = None,
+                           spec_k: Optional[int] = None, spec_ngram: int = 2,
+                           horizon: Optional[int] = None) -> "EngineConfig":
+        """Build an EngineConfig from the 18-kwarg legacy constructor
+        surface (one-release ``DeprecationWarning`` shim — the warning is
+        the caller's job; this is the pure mapping)."""
+        if horizon is not None:
+            assert horizon >= 1, horizon
+        return cls(
+            reduced=reduced, batch=batch, max_len=max_len,
+            prefill_len=prefill_len, eos_id=eos_id, seed=seed,
+            max_queue=max_queue, clock=clock, group_prefill=group_prefill,
+            store_dir=str(store_dir) if store_dir is not None else None,
+            paging=(PagingConfig(kv_block=kv_block,
+                                 arena_blocks=arena_blocks,
+                                 timeslice=timeslice) if paged else None),
+            spec=(SpecConfig(k=spec_k, ngram=spec_ngram)
+                  if spec_k is not None else None),
+            horizon=(HorizonConfig(length=horizon)
+                     if horizon is not None and horizon >= 2 else None))

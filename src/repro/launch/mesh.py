@@ -20,6 +20,22 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return compat.make_mesh(shape, axes)
 
 
+def serving_mesh(n_devices: int = 0, axis: str = "model") -> jax.sharding.Mesh:
+    """THE serving-engine mesh: a 1-D tensor-parallel mesh of ``n_devices``
+    on the ``axis`` axis (default "model" — the axis the sharding rules map
+    heads / kv_heads / ff / vocab / experts to).
+
+    One definition on purpose, routed through :func:`repro.compat.make_mesh`
+    so engine, tests and benchmarks build byte-identical meshes on the whole
+    pinned jax 0.4↔0.6 range — and so the ProgramStore's mesh-shape key
+    (``axis=size``) can never drift between producers.  ``n_devices`` <= 0
+    means "every visible device".
+    """
+    n = n_devices if n_devices > 0 else len(jax.devices())
+    assert n <= len(jax.devices()), (n, len(jax.devices()))
+    return compat.make_mesh((n,), (axis,))
+
+
 def dp_size(mesh: jax.sharding.Mesh) -> int:
     n = 1
     for ax in ("pod", "data"):

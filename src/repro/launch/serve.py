@@ -78,6 +78,7 @@ from __future__ import annotations
 import argparse
 import bisect
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -90,8 +91,11 @@ from repro.core import ProgramStore, Syscore
 from repro.core.hostcall import CALL_BATCH, CALL_METRIC, CALL_STEP_REPORT
 from repro.core.syscore import (METRIC_PROGRAM_COMPILE_MS,
                                 METRIC_PROGRAM_LOAD_MS)
+from repro.engine_config import (EngineConfig, HorizonConfig, PagingConfig,
+                                 ShardConfig, SpecConfig)
+from repro.launch.mesh import serving_mesh
 from repro.models import registry, transformer
-from repro.sharding import make_rules
+from repro.sharding import make_rules, tree_shardings
 from repro.spec import NGramProposer
 
 # CALL_METRIC name codes used by the engine (schema documented in README)
@@ -132,145 +136,119 @@ class Request:
 class ServingEngine:
     """Continuous-batching engine over three hot-loaded programs.
 
-    Parameters
-    ----------
-    arch/reduced/batch/max_len/mesh/params/seed: as the seed engine.
-    prefill_len: padded prompt length (prompts are right-padded/truncated
-        to this many tokens); defaults to ``max_len // 2``.
-    eos_id: optional token id terminating a request early.
-    max_queue: admission-queue bound; ``submit`` beyond it is rejected
-        (returns None, counted in ``rejected``).
-    clock: "wall" (seconds, default) or "step" — arrival times measured in
-        engine iterations, for deterministic scheduling tests.
-    group_prefill: when True, a burst of simultaneously-eligible requests
-        hitting an IDLE engine is admitted by ONE execution of the
-        whole-batch ``prefill`` program instead of per-slot executions.
-        Token streams match the per-slot path (asserted in tests), but the
-        batched einsums are not bit-identical on every arch (f32 low bits),
-        so the default stays per-slot — the formally exact admission.
-    store / store_dir: the persistent program store ("global memory").
-        A warm boot deserializes prefill/prefill_slot/decode from it
-        instead of recompiling (stats: ``load_s > 0, compile_s == 0``);
-        a cold boot compiles and writes back.  ``store_dir`` is shorthand
-        for ``store=ProgramStore(store_dir)``.
-    paged: run the paged KV-cache arena (repro.core.paging).  Each slot's
-        KV becomes fixed-size blocks; the device holds a capacity-bounded
-        arena of ``arena_blocks`` physical blocks addressed through a
-        block table in the cache tree, and a request's blocks page between
-        the arena and a host-DRAM tier.  Concurrency is then bounded by
-        host memory: admission defers under arena pressure, preempted
-        requests swap out (lazily, LRU) and swap back in on refill, and
-        every request stays token-exact vs the unpaged reference.
-    kv_block: tokens per KV block (paged mode); must divide ``max_len``.
-    arena_blocks: physical blocks resident on device; default fits the
-        whole batch (no pressure).  Set it below
-        ``batch * max_len / kv_block`` to serve a KV footprint larger
-        than device memory.
-    timeslice: optional preemptive round-robin (paged mode): when a queued
-        request cannot be admitted for lack of arena space, active
-        requests that have decoded ``timeslice`` tokens since their last
-        (re)admission are preempted to make room.  ``None`` = cooperative
-        only (callers may still ``preempt()`` explicitly).
-    spec_k: speculative decoding — per engine iteration, propose up to
-        ``spec_k`` draft tokens per slot from each request's own history
-        (n-gram prompt lookup, ``repro.spec``) and score them all in ONE
-        execution of a fourth hot-loaded ``verify`` program, which accepts
-        the longest greedy-matching prefix and rolls rejected state back
-        (KV ``pos`` truncation + recurrent-state snapshot select) so the
-        token stream stays IDENTICAL to non-speculative decode.  Amortizes
-        up to ``spec_k + 1`` decode dispatches per program call — the
-        paper's re-execute-vs-reload arithmetic applied to the decode
-        loop.  ``None`` (default) = plain one-token decode.  Windowed
-        layers switch to full-length (non-ring) cache buffers so rollback
-        can address rejected slots absolutely.
-    spec_ngram: suffix n-gram length the prompt-lookup proposer matches on.
-    horizon: fused multi-step decode — hot-load a ``decode_horizon``
-        program that runs up to ``horizon`` decode iterations in ONE
-        dispatch (in-graph greedy feedback + per-slot termination masking)
-        and returns emitted tokens / finish steps / occupancy as a
-        device-side event buffer, so host bookkeeping happens only at
-        horizon boundaries.  The horizon adaptively shrinks to a single
-        plain ``decode`` step while an eligible request waits in the queue
-        (a queued request never waits behind a fused dispatch; a wall-
-        clock arrival landing mid-horizon waits at most the remainder of
-        that horizon) or when no slot can emit >= 2 more tokens.
-        Token streams are identical to the step-at-a-time engine — the
-        horizon scan reuses the same per-token decode step.  Composes with
-        ``paged`` and with ``spec_k`` (a verify iteration whose proposers
-        have nothing to offer falls back to a horizon instead of a single
-        decode).  ``None`` / ``1`` = classic one-dispatch-per-token decode.
+    Configuration (Executor API v3)
+    -------------------------------
+    The engine is configured by ONE frozen value object::
+
+        ServingEngine(arch, EngineConfig(
+            batch=8, max_len=256,
+            paging=PagingConfig(kv_block=8, arena_blocks=96),
+            spec=SpecConfig(k=3), horizon=HorizonConfig(length=4),
+            shard=ShardConfig(n_devices=8)))
+
+    See :mod:`repro.engine_config` for every knob: ``PagingConfig`` is the
+    paged KV-cache arena, ``SpecConfig`` speculative decoding,
+    ``HorizonConfig`` fused decode horizons, ``ShardConfig`` the
+    tensor-parallel mesh the programs compile against.  Subsystem
+    semantics are documented in the module docstring above (v3/v4/v5) and
+    on the sub-configs themselves.
+
+    Runtime objects stay keyword arguments — a config describes *what* to
+    build, never holds device state:
+
+    params: a pre-initialized parameter tree (else ``config.seed`` inits
+        one).  On a sharded engine the tree is device_put to the rule
+        shardings either way.
+    mesh: a live mesh overriding ``config.shard`` (tests/benchmarks that
+        build their own topologies).
+    store: an open :class:`ProgramStore` ("global memory").  A warm boot
+        deserializes every program from it instead of recompiling (stats:
+        ``load_s > 0, compile_s == 0``); a cold boot compiles and writes
+        back.  Store entries are keyed per mesh shape, so each
+        ``ShardConfig.n_devices`` warm-boots independently.
+        ``config.store_dir`` is declarative shorthand.
+
+    Tensor parallelism: with ``shard.n_devices > 1`` the engine builds a
+    1-D ``serving_mesh`` and compiles all programs with the logical-axis
+    rules resolved against it — weights and KV shard over heads (head_dim
+    where heads don't divide), the paged arena shards its channel axes
+    while block identity stays replicated, so the host-side pager and
+    scheduler are mesh-agnostic.  Token streams are greedy-exact vs the
+    1-device engine (asserted per family in ``tests/test_tp.py``).
+
+    The legacy 18-kwarg surface (``batch=``, ``paged=``, ``spec_k=``, ...)
+    survives one release behind a ``DeprecationWarning`` and maps through
+    :meth:`EngineConfig.from_legacy_kwargs`.
     """
 
-    def __init__(self, arch: str, *, reduced: bool = True, batch: int = 4,
-                 max_len: int = 128, mesh=None, params=None, seed: int = 0,
-                 prefill_len: Optional[int] = None,
-                 eos_id: Optional[int] = None, max_queue: int = 64,
-                 clock: str = "wall", group_prefill: bool = False,
-                 store: Optional[ProgramStore] = None, store_dir=None,
-                 paged: bool = False, kv_block: int = 8,
-                 arena_blocks: Optional[int] = None,
-                 timeslice: Optional[int] = None,
-                 spec_k: Optional[int] = None, spec_ngram: int = 2,
-                 horizon: Optional[int] = None):
+    def __init__(self, arch: str, config: Optional[EngineConfig] = None, *,
+                 params=None, mesh=None,
+                 store: Optional[ProgramStore] = None, **legacy):
+        if config is None:
+            config = EngineConfig.from_legacy_kwargs(**legacy)
+            if legacy:
+                warnings.warn(
+                    "ServingEngine(**kwargs) is deprecated; pass "
+                    "config=EngineConfig(...) (repro.engine_config)",
+                    DeprecationWarning, stacklevel=2)
+        elif legacy:
+            raise TypeError(
+                "ServingEngine: pass either config=EngineConfig(...) or "
+                f"legacy keyword arguments, not both: {sorted(legacy)}")
+        self.config = config
         self.arch = arch
-        self.reduced = reduced
-        self.cfg = registry.get_config(arch, reduced=reduced)
+        self.reduced = config.reduced
+        self.cfg = registry.get_config(arch, reduced=config.reduced)
         assert not self.cfg.is_encdec, "decoder-only serving engine"
-        self.rules = make_rules()
-        self.batch = batch
-        self.max_len = max_len
-        self.prefill_len = prefill_len or max_len // 2
-        assert 0 < self.prefill_len < max_len
-        self.eos_id = eos_id
-        self.max_queue = max_queue
-        assert clock in ("wall", "step")
-        self.clock = clock
-        self.group_prefill = group_prefill
-        if store is None and store_dir is not None:
-            store = ProgramStore(store_dir)
+        self.rules = make_rules(fsdp=config.shard.fsdp)
+        self.batch = config.batch
+        self.max_len = config.max_len
+        self.prefill_len = config.resolved_prefill_len
+        self.eos_id = config.eos_id
+        self.max_queue = config.max_queue
+        self.clock = config.clock
+        self.group_prefill = config.group_prefill
+        if mesh is None and config.shard.n_devices > 1:
+            mesh = serving_mesh(config.shard.n_devices, config.shard.axis)
+        self.mesh = mesh
+        if store is None and config.store_dir is not None:
+            store = ProgramStore(config.store_dir)
         self.syscore = Syscore(mesh=mesh, rules=self.rules, store=store)
         mod = steps_lib.model_module(self.cfg)
         self.params = params if params is not None else mod.init_params(
-            self.cfg, jax.random.PRNGKey(seed))
+            self.cfg, jax.random.PRNGKey(config.seed))
 
-        # hot-load the three programs once (C2).  prefill = whole-batch
-        # prefill (cold restore / registry compat); prefill_slot = one-slot
+        # hot-load the programs once (C2).  prefill = whole-batch prefill
+        # (cold restore / registry compat); prefill_slot = one-slot
         # admission into a live batch; decode = one greedy token for every
-        # slot at its own position.  With a store attached, a warm boot
-        # installs all three by deserialization — no recompiles.
+        # slot at its own position; verify / decode_horizon per config.
+        # With a store attached, a warm boot installs all of them by
+        # deserialization — no recompiles.
         cfg = self.cfg
-        self.paged = paged
-        self.timeslice = timeslice
+        self.paged = config.paged
+        self.timeslice = config.paging.timeslice if config.paged else None
         self.pager = None
-        self.spec_k = spec_k
-        self.spec_ngram = spec_ngram
-        self.horizon = horizon if horizon is not None and horizon >= 2 \
-            else None
-        if horizon is not None:
-            assert horizon >= 1, horizon
-        if spec_k is not None:
-            assert spec_k >= 1, spec_k
-            assert not group_prefill, \
+        self.spec_k = config.spec_k
+        self.spec_ngram = config.spec.ngram if config.spec is not None else 2
+        self.horizon = config.horizon_length
+        if self.spec_k is not None:
+            assert not self.group_prefill, \
                 "group_prefill rewrites every slot; incompatible with the " \
                 "speculative non-ring cache layout"
-        if paged:
-            assert not group_prefill, \
+        if self.paged:
+            assert not self.group_prefill, \
                 "group_prefill rewrites every slot; incompatible with paging"
-            assert max_len % kv_block == 0, (max_len, kv_block)
-            self.kv_block = kv_block
-            self.blocks_per_slot = max_len // kv_block
-            self.arena_blocks = (arena_blocks if arena_blocks is not None
-                                 else batch * self.blocks_per_slot)
-            specs = steps_lib.paged_serve_program_specs(
-                cfg, self.rules, batch=batch, max_len=max_len,
-                prefill_len=self.prefill_len, kv_block=kv_block,
-                arena_blocks=self.arena_blocks, spec_k=spec_k,
-                horizon=self.horizon, eos_id=eos_id)
-        else:
-            specs = steps_lib.serve_program_specs(
-                cfg, self.rules, batch=batch, max_len=max_len,
-                prefill_len=self.prefill_len, spec_k=spec_k,
-                horizon=self.horizon, eos_id=eos_id)
+            self.kv_block = config.paging.kv_block
+            self.blocks_per_slot = self.max_len // self.kv_block
+            self.arena_blocks = config.paging.resolved_arena_blocks(
+                self.batch, self.max_len)
+        specs = steps_lib.serve_program_specs(cfg, self.rules, config)
+        if self.mesh is not None:
+            # the sharded engine's params live sharded exactly as the
+            # programs expect them (same rules, same resolver as the
+            # Syscore's in_shardings) — hot dispatches never reshard
+            self.params = jax.device_put(self.params, tree_shardings(
+                transformer.abstract_params(cfg), self.rules, self.mesh))
         self.programs = {name: self.syscore.hot_load(spec)
                          for name, spec in specs.items()}
         self._prefill = self.programs.get("prefill")
@@ -279,27 +257,34 @@ class ServingEngine:
         self._verify = self.programs.get("verify")
         self._decode_horizon = self.programs.get("decode_horizon")
 
-        if paged:
+        if self.paged:
             from repro.core.paging import PagedKVManager
             self.caches = transformer.init_paged_cache(
-                cfg, batch, max_len, kv_block=kv_block,
+                cfg, self.batch, self.max_len, kv_block=self.kv_block,
                 arena_blocks=self.arena_blocks)
             self.pager = PagedKVManager(
                 self.arena_blocks,
-                transformer.paged_block_bytes(cfg, kv_block),
+                transformer.paged_block_bytes(cfg, self.kv_block),
                 uva=self.syscore.uva,
                 on_fault=lambda blocks: self.syscore.hostcalls.dispatch(
                     CALL_METRIC, METRIC_PAGE_FAULT, float(blocks)))
         else:
-            self.caches = transformer.init_cache(cfg, batch, max_len,
-                                                 ring=spec_k is None)
+            self.caches = transformer.init_cache(cfg, self.batch,
+                                                 self.max_len,
+                                                 ring=self.spec_k is None)
+        self._cache_shardings = None
+        if self.mesh is not None:
+            c_abstract = specs["decode"].abstract_args[1]
+            self._cache_shardings = tree_shardings(c_abstract, self.rules,
+                                                   self.mesh)
+            self.caches = jax.device_put(self.caches, self._cache_shardings)
         self._proposers: Dict[int, NGramProposer] = {}
         self.spec_steps = 0            # verify-program executions
         self.draft_tokens = 0          # drafts proposed (engine lifetime)
         self.accepted_drafts = 0       # drafts accepted (engine lifetime)
         self.preemptions = 0
         self.swap_ins = 0
-        self.slots: List[Optional[Request]] = [None] * batch
+        self.slots: List[Optional[Request]] = [None] * self.batch
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.steps = 0                 # engine iterations (incl. idle ticks)
@@ -368,9 +353,20 @@ class ServingEngine:
             CALL_METRIC, METRIC_TTFT_MS, 1e3 * req.ttft_s)
         self._maybe_finish(req)   # max_new == 1 or instant EOS
 
+    def _pin_caches(self):
+        """Re-pin the cache tree to its compiled program shardings before a
+        dispatch.  Host-side mutation between executions (pager block moves,
+        ``pos`` writes) can leave a leaf on a default single-device sharding,
+        which an AOT-compiled executable rejects; device_put restores the
+        committed sharding and is a no-op for leaves already carrying it.
+        Mesh-less engines skip entirely."""
+        if self._cache_shardings is not None:
+            self.caches = jax.device_put(self.caches, self._cache_shardings)
+
     def _admit_one(self, slot: int, req: Request):
         """Prefill ``req`` into ``slot`` of the live batch (re-execute of the
         hot-loaded prefill_slot program — admission never recompiles)."""
+        self._pin_caches()
         tokens = np.zeros((1, self.prefill_len), np.int32)
         tokens[0, :req.prompt_len] = req.prompt
         self.caches, last = self._prefill_slot(
@@ -383,6 +379,7 @@ class ServingEngine:
         """Cold-start burst: admit every request in ONE execution of the
         whole-batch ``prefill`` program (engine must be idle — the program
         rewrites all rows; unused rows get a dummy length-1 prompt)."""
+        self._pin_caches()
         tokens = np.zeros((self.batch, self.prefill_len), np.int32)
         lengths = np.ones((self.batch,), np.int32)
         for i, req in enumerate(reqs):
@@ -521,6 +518,7 @@ class ServingEngine:
         self.syscore.hostcalls.dispatch(CALL_BATCH, calls)
 
     def _decode_once(self):
+        self._pin_caches()
         tokens = np.zeros((self.batch, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None:
@@ -580,6 +578,7 @@ class ServingEngine:
                 need = min(-(-(pos0 + k + 1) // self.kv_block),
                            self.blocks_per_slot)
                 self.caches = self.pager.grow(req.rid, need, i, self.caches)
+        self._pin_caches()
         t1 = time.perf_counter()
         self.caches, ys, n_new = self._verify(
             self.params, self.caches, jnp.asarray(tokens))
@@ -663,6 +662,7 @@ class ServingEngine:
         comes back as arrays, and ALL bookkeeping (generated-token append,
         EOS/budget finishes, paged block release, proposer feed, metrics)
         happens here, at the horizon boundary."""
+        self._pin_caches()
         tokens = np.zeros((self.batch, 1), np.int32)
         budget = np.zeros((self.batch,), np.int32)
         for i, req in enumerate(self.slots):
@@ -836,11 +836,19 @@ class ServingEngine:
         invariant this oracle relies on."""
         ref = getattr(self, "_ref_engine", None)
         if ref is None:
+            ref_config = self.config.replace(
+                batch=1, prefill_len=self.prefill_len, clock="step",
+                paging=None, spec=None, horizon=None, shard=ShardConfig(),
+                group_prefill=False, store_dir=None)
+            params = self.params
+            if self.mesh is not None:
+                # the oracle runs mesh-less single-device programs: gather
+                # the sharded tree back to plain host-backed arrays first
+                params = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)),
+                                      self.params)
             ref = self._ref_engine = ServingEngine(
-                self.arch, reduced=self.reduced, batch=1,
-                max_len=self.max_len, params=self.params,
-                prefill_len=self.prefill_len, eos_id=self.eos_id,
-                clock="step", store=self.syscore.store)
+                self.arch, ref_config, params=params,
+                store=self.syscore.store)
         req = ref.submit(prompt, max_new)
         ref.run()
         ref.drain_completed()   # keep the memoized oracle's history bounded
@@ -870,13 +878,22 @@ def main():
     ap.add_argument("--horizon", type=int, default=None,
                     help="fused decode horizon: run up to H decode "
                          "iterations per dispatch (None/1 = per-token)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices (ShardConfig.n_devices); "
+                         "programs compile against a 1-D 'model' mesh")
     args = ap.parse_args()
-    eng = ServingEngine(args.arch, reduced=True, batch=args.batch,
-                        store_dir=args.store_dir, paged=args.paged,
-                        kv_block=args.kv_block,
-                        arena_blocks=args.arena_blocks,
-                        spec_k=args.spec_k, spec_ngram=args.spec_ngram,
-                        horizon=args.horizon)
+    config = EngineConfig(
+        batch=args.batch, store_dir=args.store_dir,
+        paging=(PagingConfig(kv_block=args.kv_block,
+                             arena_blocks=args.arena_blocks)
+                if args.paged else None),
+        spec=(SpecConfig(k=args.spec_k, ngram=args.spec_ngram)
+              if args.spec_k is not None else None),
+        horizon=(HorizonConfig(length=args.horizon)
+                 if args.horizon is not None and args.horizon >= 2
+                 else None),
+        shard=ShardConfig(n_devices=args.tp))
+    eng = ServingEngine(args.arch, config)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, size=8), args.max_new)

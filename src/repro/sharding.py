@@ -156,17 +156,39 @@ def tree_structs(logical_tree):
 
 def constrain(x: jax.Array, logical: Tuple[Optional[str], ...],
               rules: Dict[str, Any]) -> jax.Array:
-    """with_sharding_constraint by logical axes; no-op outside a mesh context."""
+    """with_sharding_constraint by logical axes; no-op outside a mesh context.
+
+    The resolved spec goes through :func:`fit_spec` so a constraint can
+    never demand a sharding the shape doesn't divide (e.g. 4 heads over an
+    8-way model axis): GSPMD would satisfy it by padding + full
+    rematerialization of the tensor, the exact resharding storm the
+    constraint is meant to prevent.  Dividing shapes are unaffected."""
     mesh = get_abstract_mesh_or_none()
     if mesh is None or mesh.empty:
         return x
     spec = spec_from_logical(logical, rules, mesh)
+    spec = fit_spec(tuple(x.shape), spec, mesh)
     return jax.lax.with_sharding_constraint(x, spec)
 
 
 def get_abstract_mesh_or_none():
+    """The mesh the current trace resolves logical axes against, or None.
+
+    New jax exposes it as ``jax.sharding.get_abstract_mesh``; on the pinned
+    0.4 range that API doesn't exist, but ``compat.set_mesh`` enters the
+    legacy mesh context manager, whose mesh lives in the thread-local
+    resource env — fall back to it so ``constrain`` and the decode-KV
+    layout choice see the mesh on every supported jax.
+    """
     try:
         m = jax.sharding.get_abstract_mesh()
-        return m
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m is None or m.empty else m
     except Exception:
         return None

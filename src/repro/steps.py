@@ -346,89 +346,155 @@ def _spec_context(cfg, rules, *extra) -> str:
                     + [repr(e) for e in extra])
 
 
-def _horizon_spec(cfg, rules, context, p_abstract, c_abstract, tok_decode,
-                  batch, horizon, eos_id):
-    """The shared ``decode_horizon`` ProgramSpec of both serving-engine
-    builders (dense and paged) — one definition keeps their fingerprint
-    contexts in lockstep, so a context change can never drift between the
-    two cache layouts and resurrect a stale store entry."""
-    from repro.core.program_store import ProgramSpec
-    from repro.sharding import LogicalArray
-    budget = LogicalArray((batch,), jnp.int32, ("batch",))
-    return ProgramSpec(
-        key="decode_horizon",
-        fn=make_decode_horizon_step(cfg, rules, horizon, eos_id),
-        abstract_args=(p_abstract, c_abstract, tok_decode, budget),
-        donate_argnums=(1,),
-        context=context + "|" + repr((("horizon", horizon),
-                                      ("eos", eos_id))))
+def serve_program_specs(cfg, rules, config=None, *,
+                        batch: Optional[int] = None,
+                        max_len: Optional[int] = None,
+                        prefill_len: Optional[int] = None,
+                        spec_k: Optional[int] = None,
+                        horizon: Optional[int] = None, eos_id=None,
+                        paged: bool = False, kv_block: int = 8,
+                        arena_blocks: Optional[int] = None):
+    """The serving engine's programs as typed ProgramSpecs — ONE builder
+    for every cache layout, keyed on an :class:`EngineConfig`.
 
+    ``prefill`` (dense layout only) admits a cold-start burst over the
+    whole batch, ``prefill_slot`` admits ONE request into a live batch,
+    ``decode`` advances every slot one greedy token.  With ``config.spec``
+    a fourth ``verify`` program scores ``spec.k`` draft tokens per slot in
+    one execution (speculative decoding) — and the dense cache layout
+    switches to full-length (``ring=False``) windowed buffers, because
+    verify rollback needs rejected writes to land at absolute slots beyond
+    the truncated ``pos``, never inside a live ring window.  With
+    ``config.horizon`` a ``decode_horizon`` program fuses ``horizon.length``
+    greedy steps into one dispatch (in-graph feedback + per-slot
+    termination masking); its closure-captured ``(horizon, eos_id)``
+    statics are folded into its fingerprint context so a ProgramStore
+    never confuses two horizon lengths.  With ``config.paging`` the cache
+    tree becomes the block-table-addressed physical-block arena of
+    ``repro.core.paging`` and ``prefill_slot`` scatters block-wise.
 
-def serve_program_specs(cfg, rules, *, batch: int, max_len: int,
-                        prefill_len: int, spec_k: Optional[int] = None,
-                        horizon: Optional[int] = None, eos_id=None):
-    """The serving engine's programs as typed ProgramSpecs.
+    All programs donate the cache tree (argnum 1) and carry the sharding
+    rules in their fingerprint context; their abstract argument AND output
+    trees are LogicalArrays, so a mesh-holding Syscore resolves in- and
+    out-shardings from one place — in particular the donated cache's
+    output sharding is pinned to its input sharding (re-execution never
+    reshards), and host-read outputs (tokens, event buffers) come back
+    replicated.
 
-    ``prefill`` admits a cold-start burst over the whole batch,
-    ``prefill_slot`` admits ONE request into a live batch, ``decode``
-    advances every slot one greedy token.  With ``spec_k`` a fourth
-    ``verify`` program scores ``spec_k`` draft tokens per slot in one
-    execution (speculative decoding) — and the cache layout switches to
-    full-length (``ring=False``) windowed buffers, because verify rollback
-    needs rejected writes to land at absolute slots beyond the truncated
-    ``pos``, never inside a live ring window.  With ``horizon`` >= 2 a
-    ``decode_horizon`` program fuses that many greedy steps into one
-    dispatch (in-graph feedback + per-slot termination masking); its
-    closure-captured ``(horizon, eos_id)`` statics are folded into its
-    fingerprint context so a ProgramStore never confuses two horizon
-    lengths.  All programs donate the cache tree (argnum 1).
+    Legacy keyword form ``serve_program_specs(cfg, rules, batch=...,
+    max_len=..., ...)`` builds the config internally; new callers pass
+    ``config=EngineConfig(...)`` (program-irrelevant fields — clock, queue
+    bound, seed, store location — are ignored by construction:
+    :meth:`EngineConfig.program_context`).
     """
     from repro.core.program_store import ProgramSpec
+    from repro.engine_config import (EngineConfig, HorizonConfig,
+                                     PagingConfig, SpecConfig)
     from repro.sharding import LogicalArray
-    mod = model_module(cfg)
-    ring = spec_k is None
-    p_abstract = mod.abstract_params(cfg)
-    c_abstract = transformer.abstract_cache(cfg, batch, max_len, ring=ring)
-    tok_batch = LogicalArray((batch, prefill_len), jnp.int32,
-                             ("batch", "seq"))
-    lens_batch = LogicalArray((batch,), jnp.int32, ("batch",))
+    if config is None:
+        assert batch is not None and max_len is not None, \
+            "legacy form needs batch= and max_len="
+        config = EngineConfig(
+            batch=batch, max_len=max_len, prefill_len=prefill_len,
+            eos_id=eos_id,
+            paging=(PagingConfig(kv_block=kv_block,
+                                 arena_blocks=arena_blocks)
+                    if paged else None),
+            spec=SpecConfig(k=spec_k) if spec_k is not None else None,
+            horizon=(HorizonConfig(length=horizon)
+                     if horizon is not None and horizon >= 2 else None))
+    elif (batch is not None or max_len is not None
+          or prefill_len is not None or spec_k is not None
+          or horizon is not None or eos_id is not None or paged
+          or arena_blocks is not None):
+        raise TypeError(
+            "serve_program_specs: pass either config=EngineConfig(...) or "
+            "the legacy keyword arguments, not both")
+
+    assert not cfg.is_encdec, "decoder-only serving path"
+    batch = config.batch
+    max_len = config.max_len
+    prefill_len = config.resolved_prefill_len
+    spec_k = config.spec_k
+    paged = config.paged
+    ring = spec_k is None                    # dense layout only
+    p_abstract = transformer.abstract_params(cfg)
+    if paged:
+        arena_blocks = config.paging.resolved_arena_blocks(batch, max_len)
+        c_abstract = transformer.abstract_paged_cache(
+            cfg, batch, max_len, kv_block=config.paging.kv_block,
+            arena_blocks=arena_blocks)
+    else:
+        c_abstract = transformer.abstract_cache(cfg, batch, max_len,
+                                                ring=ring)
+    V = cfg.padded_vocab
     tok_slot = LogicalArray((1, prefill_len), jnp.int32, ("batch", "seq"))
     tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
     scalar = LogicalArray((), jnp.int32, ())
-    prefill = make_prefill_step(cfg, rules)
-    context = _spec_context(cfg, rules, batch, max_len, prefill_len,
-                            *(() if ring else ("spec", spec_k)))
-
-    def prefill_batch(params, caches, tokens, lengths):
-        return prefill(params, caches,
-                       {"tokens": tokens, "lengths": lengths})
+    out_tok = LogicalArray((batch, 1), jnp.int32, ("batch", None))
+    out_logits = LogicalArray((batch, 1, V), jnp.float32,
+                              ("batch", None, "vocab"))
+    context = _spec_context(cfg, rules, config.program_context())
 
     specs = {
-        "prefill": ProgramSpec(
-            key="prefill", fn=prefill_batch,
-            abstract_args=(p_abstract, c_abstract, tok_batch, lens_batch),
-            donate_argnums=(1,), context=context),
         "prefill_slot": ProgramSpec(
             key="prefill_slot",
-            fn=make_prefill_slot_step(cfg, rules, max_len, ring=ring),
+            fn=(make_paged_prefill_slot_step(cfg, rules, max_len,
+                                             config.paging.kv_block)
+                if paged else
+                make_prefill_slot_step(cfg, rules, max_len, ring=ring)),
             abstract_args=(p_abstract, c_abstract, tok_slot, scalar, scalar),
-            donate_argnums=(1,), context=context),
+            donate_argnums=(1,), context=context,
+            out_logical=(c_abstract,
+                         LogicalArray((V,), jnp.float32, ("vocab",)))),
         "decode": ProgramSpec(
             key="decode", fn=make_serve_step(cfg, rules),
             abstract_args=(p_abstract, c_abstract, tok_decode),
-            donate_argnums=(1,), context=context),
+            donate_argnums=(1,), context=context,
+            out_logical=(c_abstract, out_tok, out_logits)),
     }
+    if not paged:
+        tok_batch = LogicalArray((batch, prefill_len), jnp.int32,
+                                 ("batch", "seq"))
+        lens_batch = LogicalArray((batch,), jnp.int32, ("batch",))
+        prefill = make_prefill_step(cfg, rules)
+
+        def prefill_batch(params, caches, tokens, lengths):
+            return prefill(params, caches,
+                           {"tokens": tokens, "lengths": lengths})
+
+        specs["prefill"] = ProgramSpec(
+            key="prefill", fn=prefill_batch,
+            abstract_args=(p_abstract, c_abstract, tok_batch, lens_batch),
+            donate_argnums=(1,), context=context,
+            out_logical=(c_abstract,
+                         LogicalArray((batch, V), jnp.float32,
+                                      ("batch", "vocab"))))
     if spec_k is not None:
         tok_verify = LogicalArray((batch, spec_k + 1), jnp.int32,
                                   ("batch", None))
         specs["verify"] = ProgramSpec(
             key="verify", fn=make_verify_step(cfg, rules),
             abstract_args=(p_abstract, c_abstract, tok_verify),
-            donate_argnums=(1,), context=context)
-    if horizon is not None and horizon >= 2:
-        specs["decode_horizon"] = _horizon_spec(
-            cfg, rules, context, p_abstract, c_abstract, tok_decode,
-            batch, horizon, eos_id)
+            donate_argnums=(1,), context=context,
+            out_logical=(c_abstract,
+                         LogicalArray((batch, spec_k + 1), jnp.int32,
+                                      ("batch", None)),
+                         LogicalArray((batch,), jnp.int32, ("batch",))))
+    H = config.horizon_length
+    if H is not None:
+        budget = LogicalArray((batch,), jnp.int32, ("batch",))
+        specs["decode_horizon"] = ProgramSpec(
+            key="decode_horizon",
+            fn=make_decode_horizon_step(cfg, rules, H, config.eos_id),
+            abstract_args=(p_abstract, c_abstract, tok_decode, budget),
+            donate_argnums=(1,),
+            context=context + "|" + config.horizon_context(),
+            out_logical=(c_abstract, {
+                "tokens": LogicalArray((batch, H), jnp.int32,
+                                       ("batch", None)),
+                "n_emitted": LogicalArray((batch,), jnp.int32, ("batch",)),
+                "occupancy": LogicalArray((H,), jnp.float32, (None,))}))
     return specs
 
 
@@ -437,52 +503,23 @@ def paged_serve_program_specs(cfg, rules, *, batch: int, max_len: int,
                               arena_blocks: int,
                               spec_k: Optional[int] = None,
                               horizon: Optional[int] = None, eos_id=None):
-    """The paged serving engine's programs as typed ProgramSpecs.
-
-    ``prefill_slot`` admits one request into the arena blocks its slot's
-    block-table row maps; ``decode`` advances every mapped slot one greedy
-    token through block-table-indexed cache reads/writes; with ``spec_k``
-    a ``verify`` program speculatively scores ``spec_k`` drafts per slot
-    (rejected block writes are scatter-restored through the block table).
-    All are pure array programs (the pager moves blocks host<->device only
-    between executions), so they serialize into a :class:`ProgramStore`
-    and warm-boot by deserialization exactly like the dense programs.
-    """
-    from repro.core.program_store import ProgramSpec
-    from repro.sharding import LogicalArray
-    assert not cfg.is_encdec, "decoder-only serving path"
-    p_abstract = transformer.abstract_params(cfg)
-    c_abstract = transformer.abstract_paged_cache(
-        cfg, batch, max_len, kv_block=kv_block, arena_blocks=arena_blocks)
-    tok_slot = LogicalArray((1, prefill_len), jnp.int32, ("batch", "seq"))
-    tok_decode = LogicalArray((batch, 1), jnp.int32, ("batch", None))
-    scalar = LogicalArray((), jnp.int32, ())
-    context = _spec_context(cfg, rules, batch, max_len, prefill_len,
-                            "paged", kv_block, arena_blocks,
-                            *(() if spec_k is None else ("spec", spec_k)))
-    specs = {
-        "prefill_slot": ProgramSpec(
-            key="prefill_slot",
-            fn=make_paged_prefill_slot_step(cfg, rules, max_len, kv_block),
-            abstract_args=(p_abstract, c_abstract, tok_slot, scalar, scalar),
-            donate_argnums=(1,), context=context),
-        "decode": ProgramSpec(
-            key="decode", fn=make_serve_step(cfg, rules),
-            abstract_args=(p_abstract, c_abstract, tok_decode),
-            donate_argnums=(1,), context=context),
-    }
-    if spec_k is not None:
-        tok_verify = LogicalArray((batch, spec_k + 1), jnp.int32,
-                                  ("batch", None))
-        specs["verify"] = ProgramSpec(
-            key="verify", fn=make_verify_step(cfg, rules),
-            abstract_args=(p_abstract, c_abstract, tok_verify),
-            donate_argnums=(1,), context=context)
-    if horizon is not None and horizon >= 2:
-        specs["decode_horizon"] = _horizon_spec(
-            cfg, rules, context, p_abstract, c_abstract, tok_decode,
-            batch, horizon, eos_id)
-    return specs
+    """Deprecated shim over :func:`serve_program_specs` (one release): the
+    paged layout is now selected by ``EngineConfig.paging``, not a forked
+    builder."""
+    import warnings
+    warnings.warn(
+        "paged_serve_program_specs is deprecated; call "
+        "serve_program_specs(cfg, rules, config=EngineConfig(..., "
+        "paging=PagingConfig(...)))", DeprecationWarning, stacklevel=2)
+    from repro.engine_config import (EngineConfig, HorizonConfig,
+                                     PagingConfig, SpecConfig)
+    return serve_program_specs(cfg, rules, EngineConfig(
+        batch=batch, max_len=max_len, prefill_len=prefill_len,
+        eos_id=eos_id,
+        paging=PagingConfig(kv_block=kv_block, arena_blocks=arena_blocks),
+        spec=SpecConfig(k=spec_k) if spec_k is not None else None,
+        horizon=(HorizonConfig(length=horizon)
+                 if horizon is not None and horizon >= 2 else None)))
 
 
 def train_program_spec(cfg, rules, opt_cfg: AdamWConfig, abstract_state,

@@ -1,0 +1,121 @@
+"""EngineConfig surface: validation, dict round trip, fingerprint contexts
+and the one-release legacy-kwargs shim."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.engine_config import (EngineConfig, HorizonConfig, PagingConfig,
+                                 ShardConfig, SpecConfig)
+from repro.launch.serve import ServingEngine
+
+
+def test_defaults_and_derived():
+    cfg = EngineConfig()
+    assert cfg.resolved_prefill_len == cfg.max_len // 2
+    assert not cfg.paged and cfg.spec_k is None \
+        and cfg.horizon_length is None
+    assert cfg.shard == ShardConfig()          # always present, 1 device
+    paged = EngineConfig(batch=2, max_len=32, paging=PagingConfig(kv_block=8))
+    assert paged.paging.resolved_arena_blocks(2, 32) == 2 * (32 // 8)
+
+
+def test_validation():
+    with pytest.raises(AssertionError):
+        EngineConfig(max_len=32, prefill_len=32)       # prefill < max_len
+    with pytest.raises(AssertionError):
+        EngineConfig(clock="sundial")
+    with pytest.raises(AssertionError):
+        EngineConfig(max_len=30, paging=PagingConfig(kv_block=8))
+    with pytest.raises(AssertionError):
+        SpecConfig(k=0)
+    with pytest.raises(AssertionError):
+        HorizonConfig(length=1)                        # <2 means "no config"
+    with pytest.raises(AssertionError):
+        ShardConfig(n_devices=0)
+
+
+def test_dict_round_trip():
+    cfg = EngineConfig(batch=8, max_len=64, eos_id=7,
+                       paging=PagingConfig(kv_block=8, arena_blocks=12,
+                                           timeslice=4),
+                       spec=SpecConfig(k=3, ngram=2),
+                       horizon=HorizonConfig(length=4),
+                       shard=ShardConfig(n_devices=8))
+    d = cfg.to_dict()
+    assert d["paging"]["kv_block"] == 8 and d["shard"]["n_devices"] == 8
+    import json
+    assert EngineConfig.from_dict(json.loads(json.dumps(d))) == cfg
+    with pytest.raises(TypeError):
+        EngineConfig.from_dict({"batch": 4, "warp_drive": True})
+
+
+def test_program_context_tracks_program_shape_only():
+    base = EngineConfig(batch=4, max_len=64)
+    # host-side policy does not change the compiled programs
+    for variant in (base.replace(clock="step"), base.replace(max_queue=1),
+                    base.replace(seed=9), base.replace(store_dir="/tmp/x"),
+                    base.replace(shard=ShardConfig(n_devices=8)),
+                    base.replace(eos_id=7),
+                    base.replace(horizon=HorizonConfig(length=4))):
+        assert variant.program_context() == base.program_context(), variant
+    # program shape does
+    for variant in (base.replace(batch=8), base.replace(max_len=128),
+                    base.replace(prefill_len=16),
+                    base.replace(paging=PagingConfig(kv_block=8)),
+                    base.replace(spec=SpecConfig(k=3))):
+        assert variant.program_context() != base.program_context(), variant
+    # horizon/eos statics live in the horizon program's own context
+    h4 = base.replace(horizon=HorizonConfig(length=4))
+    assert h4.horizon_context() != \
+        base.replace(horizon=HorizonConfig(length=8)).horizon_context()
+    assert h4.horizon_context() != \
+        h4.replace(eos_id=7).horizon_context()
+
+
+def test_from_legacy_kwargs_mapping():
+    cfg = EngineConfig.from_legacy_kwargs(
+        batch=2, max_len=32, prefill_len=8, paged=True, kv_block=8,
+        arena_blocks=6, timeslice=3, spec_k=2, spec_ngram=3, horizon=4,
+        eos_id=5, clock="step")
+    assert cfg.paging == PagingConfig(kv_block=8, arena_blocks=6,
+                                      timeslice=3)
+    assert cfg.spec == SpecConfig(k=2, ngram=3)
+    assert cfg.horizon == HorizonConfig(length=4)
+    assert cfg.eos_id == 5 and cfg.clock == "step"
+    # horizon=1 is the legacy "plain decode" spelling, not an error
+    assert EngineConfig.from_legacy_kwargs(horizon=1).horizon is None
+    assert EngineConfig.from_legacy_kwargs(paged=False,
+                                           kv_block=16).paging is None
+
+
+def test_engine_legacy_kwargs_warn_and_match(tmp_path):
+    """The legacy constructor surface still works (one release), warns,
+    and builds the same engine the config form builds."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = ServingEngine("qwen3-0.6b", batch=2, max_len=32,
+                               prefill_len=8, clock="step")
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfged = ServingEngine("qwen3-0.6b", EngineConfig(
+            batch=2, max_len=32, prefill_len=8, clock="step"))
+        assert not [x for x in w if issubclass(x.category,
+                                               DeprecationWarning)]
+    assert legacy.config == cfged.config
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, legacy.cfg.vocab_size, size=6)
+               for _ in range(3)]
+    for p in prompts:
+        legacy.submit(p, 6)
+        cfged.submit(p, 6)
+    legacy.run()
+    cfged.run()
+    assert [r.generated for r in legacy.completed] == \
+        [r.generated for r in cfged.completed]
+
+
+def test_engine_rejects_config_plus_legacy():
+    with pytest.raises(TypeError):
+        ServingEngine("qwen3-0.6b", EngineConfig(), batch=2)
