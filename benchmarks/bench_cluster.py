@@ -1,0 +1,172 @@
+"""Cluster serving: fleet scaling with one kill-and-recover per cell.
+
+The paper's many-core runtime argument at fleet granularity: N replicas
+behind one router, sharing a single ProgramStore, each cell surviving one
+injected replica kill.  Measures aggregate decode throughput and p99 TTFT
+for N in {1, 2, 4}, records the recovery wall-time, and asserts the
+recovery was WARM — reboot cost is deserialization, not compilation
+(``compile_total / load_total > 1``) — with token-exact streams across
+every fleet width and zero lost requests.  Records the sweep into
+``BENCH_cluster.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+CLUSTER_JSON = REPO / "BENCH_cluster.json"
+FLEET = (1, 2, 4)
+
+
+def _workload(n_req, rng):
+    return [(rng.integers(1, 500, size=int(rng.integers(4, 10))),
+             int(m)) for m in rng.integers(3, 6, size=n_req)]
+
+
+def _compile_load_totals(sup):
+    """(sum compile_s, sum load_s) over every program of every live
+    replica."""
+    compile_s = load_s = 0.0
+    for rep in sup.replicas:
+        if rep.engine is None:
+            continue
+        for p in rep.engine.syscore.report()["programs"].values():
+            compile_s += p["compile_s"]
+            load_s += p["load_s"]
+    return compile_s, load_s
+
+
+def run(smoke: bool = False, arch: str = "qwen3-0.6b", store_dir=None):
+    from repro.cluster import Supervisor
+    from repro.core import ProgramStore
+    from repro.engine_config import ClusterConfig, EngineConfig
+    from repro.runtime.fault import FaultInjector
+
+    batch, max_len, n_req, kill_step = \
+        (2, 32, 6, 3) if smoke else (4, 64, 12, 5)
+    ecfg = EngineConfig(batch=batch, max_len=max_len, clock="step", seed=0)
+    work = _workload(n_req, np.random.default_rng(0))
+
+    tmp = None
+    if store_dir is None:
+        tmp = store_dir = tempfile.mkdtemp(prefix="bench_cluster_store_")
+    cells, params, cold_compile_s = [], None, 0.0
+    try:
+        for n in FLEET:
+            inj = FaultInjector(fail_at_steps=[kill_step])
+            sup = Supervisor(arch, ClusterConfig(engine=ecfg, replicas=n),
+                             params=params, store=ProgramStore(store_dir),
+                             fault_hooks={0: inj.check})
+            if params is None:           # first cell: share params onward
+                params = sup.params
+                cold_compile_s, _ = _compile_load_totals(sup)
+            rids = [sup.submit(p, max_new=m) for p, m in work]
+            assert all(r is not None for r in rids), "admission refused"
+            t0 = time.perf_counter()
+            stats = sup.run()
+            assert inj.fired == [kill_step], inj.fired
+            assert stats["kills"] == 1 and len(stats["recoveries"]) == 1
+            zero_lost = (stats["requests"] == n_req and
+                         sorted(sup.streams) == rids)
+            assert zero_lost, (stats["requests"], sorted(sup.streams))
+            rec = stats["recoveries"][0]
+            cells.append({
+                "replicas": n,
+                "requests": stats["requests"],
+                "tokens": stats["tokens"],
+                "wall_s": time.perf_counter() - t0,
+                "agg_decode_tok_per_s": stats["agg_decode_tok_per_s"],
+                "ttft_p99_ms": stats["ttft_p99_ms"],
+                "kills": stats["kills"],
+                "recovery": {k: rec.get(k) for k in
+                             ("replica", "downtime_s", "reboot_s", "warm",
+                              "compile_s", "load_s", "replayed")},
+                "streams": {str(r): sup.streams[r] for r in rids},
+            })
+            sup.close()
+    finally:
+        serialization_available = ProgramStore(store_dir).report()[
+            "entries"] > 0
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    # token-exact across every fleet width: same rid -> same stream
+    base = cells[0]["streams"]
+    token_exact = all(c["streams"] == base for c in cells[1:])
+    assert token_exact, "streams diverged across fleet widths"
+
+    # warm failover: every recovery deserialized, never recompiled, and
+    # the fleet-wide compile-once contract beats per-replica cold boots
+    warm_speedup = None
+    if serialization_available:
+        for c in cells:
+            assert c["recovery"]["warm"], c["recovery"]
+            assert c["recovery"]["compile_s"] == 0, c["recovery"]
+        load_per_boot = [c["recovery"]["load_s"] for c in cells
+                        if c["recovery"]["load_s"]]
+        if load_per_boot and cold_compile_s > 0:
+            warm_speedup = cold_compile_s / (sum(load_per_boot) /
+                                             len(load_per_boot))
+            assert warm_speedup > 1, (cold_compile_s, load_per_boot)
+
+    record = {
+        "bench": "cluster",
+        "arch": f"{arch}(reduced)",
+        "engine": {"batch": batch, "max_len": max_len, "clock": "step"},
+        "requests": n_req,
+        "kill_step": kill_step,
+        "env": {"jax": __import__("jax").__version__,
+                "backend": __import__("jax").default_backend()},
+        "cells": [{k: v for k, v in c.items() if k != "streams"}
+                  for c in cells],
+        "token_exact_across_n": token_exact,
+        "zero_lost": True,
+        "serialization_available": serialization_available,
+        "warm_recovery_speedup": warm_speedup,
+    }
+    CLUSTER_JSON.write_text(json.dumps(record, indent=2) + "\n")
+
+    rows = []
+    for c in cells:
+        n = c["replicas"]
+        rows.append((f"cluster_n{n}_decode_tok_per_s",
+                     c["agg_decode_tok_per_s"],
+                     f"aggregate; p99_ttft={c['ttft_p99_ms']:.1f}ms "
+                     f"reqs={c['requests']} -> {CLUSTER_JSON.name}"))
+        rows.append((f"cluster_n{n}_recovery_s",
+                     c["recovery"]["downtime_s"],
+                     f"kill@step{kill_step} warm={c['recovery']['warm']} "
+                     f"replayed={c['recovery']['replayed']}"))
+    rows.append(("cluster_warm_recovery_speedup",
+                 warm_speedup if warm_speedup is not None else -1.0,
+                 f"cold_compile/load; token_exact={token_exact} "
+                 f"serialization={serialization_available}"))
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--store-dir", default=None,
+                    help="reuse a store dir across invocations (default: "
+                         "fresh temp dir, removed afterwards)")
+    args = ap.parse_args()
+    for name, value, derived in run(smoke=args.smoke, arch=args.arch,
+                                    store_dir=args.store_dir):
+        print(f"{name},{value:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    main()

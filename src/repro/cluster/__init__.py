@@ -1,0 +1,16 @@
+"""Multi-replica cluster serving: router, health checks, warm failover.
+
+The fleet layer over :class:`repro.launch.serve.ServingEngine`: a
+:class:`Supervisor` runs N replicas behind a :class:`Router`, monitors
+health through the engines' hostcall telemetry, and recovers a crashed
+replica warm from the shared :class:`~repro.core.ProgramStore`, replaying
+its unfinished requests from a durable :class:`RequestJournal`.  See
+``repro.cluster.supervisor`` for the full model and
+``repro.engine_config.ClusterConfig`` for the knobs.
+"""
+from repro.cluster.journal import RequestJournal
+from repro.cluster.router import Router
+from repro.cluster.supervisor import ClusterError, Replica, Supervisor
+
+__all__ = ["Supervisor", "Replica", "Router", "RequestJournal",
+           "ClusterError"]

@@ -1,0 +1,91 @@
+"""Request router — the cluster's front door.
+
+One ``Router`` assigns every incoming request to a replica from the
+replicas' host-side :meth:`~repro.launch.serve.ServingEngine.snapshot`
+views (queue depth, slot occupancy, arena pressure — no device sync).
+Policies (``repro.engine_config.ROUTER_POLICIES``):
+
+``least_loaded``
+    Score each replica by normalized queue + slot load plus paged-arena
+    pressure; lowest score wins.  The default: it is what keeps tail TTFT
+    flat when request lengths are mixed.
+``round_robin``
+    Cycle through live replicas in index order — the baseline policy and
+    the fairest one when every request costs the same.
+``prefix_affinity``
+    Hash the prompt's first ``affinity_len`` tokens to a preferred
+    replica, falling back to load order behind it.  Requests sharing a
+    system-prompt prefix then land on the same replica's KV cache — the
+    placement hook the cross-request prefix-sharing roadmap item plugs
+    into.
+
+``rank()`` returns ALL candidates best-first rather than a single pick:
+the caller walks the order until a replica actually admits (a full
+admission queue rejects), so routing composes with engine back-pressure
+instead of fighting it.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List
+
+import numpy as np
+
+from repro.engine_config import ROUTER_POLICIES
+
+__all__ = ["Router"]
+
+
+class Router:
+    """Pick a serving order over replicas for each incoming request."""
+
+    def __init__(self, policy: str = "least_loaded", affinity_len: int = 8):
+        assert policy in ROUTER_POLICIES, (policy, ROUTER_POLICIES)
+        self.policy = policy
+        self.affinity_len = affinity_len
+        self._rr = 0                 # round-robin cursor
+        self.routed = 0
+
+    # -- scoring -------------------------------------------------------------
+    @staticmethod
+    def load(snapshot: Dict[str, object]) -> float:
+        """A replica's load in [0, ~2+]: occupied slots and queued requests
+        normalized by batch width, plus paged-arena pressure (a replica
+        whose arena is full will defer admissions even with a free slot)."""
+        batch = max(int(snapshot.get("batch", 1)), 1)
+        backlog = (int(snapshot.get("active", 0)) +
+                   int(snapshot.get("queue_depth", 0))) / batch
+        return backlog + float(snapshot.get("arena_occupancy", 0.0))
+
+    def _affinity_key(self, prompt) -> int:
+        """Deterministic prefix hash (crc32 — NOT ``hash()``, which is
+        salted per process and would re-shuffle affinity every reboot)."""
+        prefix = np.asarray(prompt, np.int32).ravel()[: self.affinity_len]
+        return zlib.crc32(prefix.tobytes())
+
+    # -- ranking -------------------------------------------------------------
+    def rank(self, prompt, snapshots: Dict[int, Dict[str, object]]
+             ) -> List[int]:
+        """Replica indices best-first for this prompt.
+
+        ``snapshots`` maps replica index -> its engine snapshot and must
+        contain only live replicas; dead ones are simply absent.  The
+        caller tries indices in order until one admits.
+        """
+        if not snapshots:
+            return []
+        by_load = sorted(snapshots,
+                         key=lambda i: (self.load(snapshots[i]), i))
+        if self.policy == "round_robin":
+            idx = sorted(snapshots)
+            start = self._rr % len(idx)
+            self._rr += 1
+            order = idx[start:] + idx[:start]
+        elif self.policy == "prefix_affinity":
+            idx = sorted(snapshots)
+            preferred = idx[self._affinity_key(prompt) % len(idx)]
+            order = [preferred] + [i for i in by_load if i != preferred]
+        else:                        # least_loaded
+            order = by_load
+        self.routed += 1
+        return order

@@ -1,0 +1,412 @@
+"""Supervisor — multi-replica cluster serving over one shared ProgramStore.
+
+One engine serves one batch; a fleet serves traffic.  The supervisor owns
+N :class:`~repro.launch.serve.ServingEngine` replicas and runs the whole
+cluster cooperatively in one process, the same way the paper's host-side
+runtime coordinates many Epiphany cores over fast shared state:
+
+  * a :class:`~repro.cluster.router.Router` assigns every incoming request
+    (least-loaded by default) from the replicas' host-side snapshots;
+  * each replica is driven one :meth:`~ServingEngine.tick` at a time, so a
+    single supervisor loop multiplexes the fleet without threads and the
+    whole schedule stays deterministic on the step clock;
+  * health checks every ``health_interval`` ticks feed the replica's new
+    step-latency telemetry (the engine's existing METRIC_DECODE_MS
+    hostcall channel) into a per-replica
+    :class:`~repro.runtime.fault.StragglerMonitor`;
+  * a crash (``SimulatedFailure`` escaping a tick — the injectable
+    ``fault_hook``) discards the engine; the replica reboots under a
+    :class:`~repro.runtime.fault.RestartPolicy` (restart-with-backoff,
+    bounded attempts) by deserializing every hot program from the SHARED
+    :class:`~repro.core.ProgramStore` — recovery cost is load, not
+    compile — and replays its unfinished requests from its durable
+    :class:`~repro.cluster.journal.RequestJournal`;
+  * past the restart budget the replica is failed permanently and its
+    unfinished requests re-route through the router to survivors.
+
+Exactness: replicas share one params tree and greedy decoding is
+deterministic, so the merged per-request streams of an N-replica cluster
+— under any kill/reboot/replay schedule — are byte-identical to a single
+engine serving the same requests (gated in ``tests/test_cluster.py``).
+A kill loses no request: everything un-finished is journaled and replayed
+from the prompt.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.cluster.journal import RequestJournal
+from repro.cluster.router import Router
+from repro.core import ProgramStore
+from repro.engine_config import ClusterConfig
+from repro.launch.serve import (METRIC_DECODE_MS, METRIC_TTFT_MS,
+                                ServingEngine)
+from repro.runtime.fault import (RestartPolicy, SimulatedFailure,
+                                 StragglerMonitor)
+
+__all__ = ["Supervisor", "Replica", "ClusterError"]
+
+
+class ClusterError(RuntimeError):
+    """The cluster can no longer make progress (all replicas failed)."""
+
+
+@dataclass
+class Replica:
+    """Supervisor-side state of one replica slot.
+
+    The engine is disposable (a crash discards it whole); everything that
+    must survive a crash — the journal, the straggler monitor, restart
+    accounting, accumulated telemetry — lives here on the host side.
+    """
+    idx: int
+    engine: Optional[ServingEngine] = None
+    journal: RequestJournal = field(default_factory=RequestJournal)
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    state: str = "running"            # "running" | "dead" | "failed"
+    ticks: int = 0                    # supervised ticks, engine lifetime
+    served: int = 0                   # completions collected from this slot
+    restarts: int = 0                 # crash count == restart attempts used
+    backoff_until: float = 0.0        # perf_counter deadline for the reboot
+    recoveries: List[Dict[str, Any]] = field(default_factory=list)
+    # telemetry accumulators (survive engine swaps; offsets reset per boot)
+    acc_decode_tokens: int = 0
+    acc_decode_ms: float = 0.0
+    _dec_tok_seen: int = 0
+    _dec_off: int = 0
+    _ttft_off: int = 0
+    _collected: int = 0               # engine.completed entries consumed
+    _pending_step_ms: List[float] = field(default_factory=list)
+
+    def reset_offsets(self):
+        self._dec_tok_seen = 0
+        self._dec_off = 0
+        self._ttft_off = 0
+        self._collected = 0
+
+
+class Supervisor:
+    """Run ``config.replicas`` ServingEngines behind one router.
+
+    Runtime objects stay keyword arguments, exactly like the engine:
+
+    params: shared parameter tree; ``None`` lets replica 0 initialize one
+        (``config.engine.seed``) which every other replica — and every
+        failover reboot — then shares, so all streams are greedy-exact.
+    store: an open :class:`ProgramStore` overriding ``config.store_dir``.
+        Replica 0's cold boot compiles and stores; replicas 1..N-1 and all
+        reboots install by deserialization (``compile_s == 0``).
+    fault_hooks: replica index -> hook injected as the engine's
+        ``fault_hook`` (e.g. a ``FaultInjector.check`` bound method).  The
+        SAME hook is re-attached across reboots, so a once-per-step
+        injector kills once, not every reboot.
+    """
+
+    def __init__(self, arch: str, config: Optional[ClusterConfig] = None, *,
+                 params=None, store: Optional[ProgramStore] = None,
+                 fault_hooks: Optional[Dict[int, Any]] = None):
+        self.config = config if config is not None else ClusterConfig()
+        self.arch = arch
+        self.router = Router(self.config.router, self.config.affinity_len)
+        self.policy = RestartPolicy(self.config.max_restarts,
+                                    self.config.backoff_s,
+                                    self.config.backoff_factor)
+        if store is None and self.config.store_dir is not None:
+            store = ProgramStore(self.config.store_dir)
+        self.store = store
+        self.fault_hooks = dict(fault_hooks or {})
+        self.params = params
+        self.streams: Dict[int, List[int]] = {}    # rid -> final tokens
+        self._completed_order: List[int] = []
+        self._ttft_ms: List[float] = []
+        self.owner: Dict[int, int] = {}            # rid -> replica idx
+        self.kills = 0
+        self.rerouted = 0
+        self.rejected = 0
+        self._next_rid = 0
+        self.replicas: List[Replica] = []
+        for i in range(self.config.replicas):
+            journal = RequestJournal(
+                None if self.config.journal_dir is None else
+                f"{self.config.journal_dir}/replica{i}.jsonl")
+            rep = Replica(idx=i, journal=journal)
+            rep.engine = self._boot_engine(i)
+            self.replicas.append(rep)
+            if self.params is None:
+                # replica 0 initialized the shared tree; every later boot
+                # (replicas and reboots alike) reuses it
+                self.params = rep.engine.params
+
+    # -- replica lifecycle ----------------------------------------------------
+    def _boot_engine(self, idx: int) -> ServingEngine:
+        return ServingEngine(self.arch, self.config.engine,
+                             params=self.params, store=self.store,
+                             fault_hook=self.fault_hooks.get(idx))
+
+    def _on_crash(self, rep: Replica, err: Exception):
+        """A tick raised: the engine is gone, with every in-flight request
+        — which is exactly what the journal still holds."""
+        self.kills += 1
+        rep.engine = None
+        rep.restarts += 1
+        rep.reset_offsets()
+        if self.policy.allows(rep.restarts):
+            rep.state = "dead"
+            rep.backoff_until = (time.perf_counter() +
+                                 self.policy.delay_s(rep.restarts))
+            rep.recoveries.append({
+                "replica": rep.idx, "restart_n": rep.restarts,
+                "error": str(err), "t_kill": time.perf_counter(),
+            })
+        else:
+            rep.state = "failed"      # out of budget: survivors take over
+
+    def _maybe_restart(self, rep: Replica) -> bool:
+        """Reboot a dead replica once its backoff elapses: warm program
+        install from the shared store, then journal replay."""
+        now = time.perf_counter()
+        if now < rep.backoff_until:
+            return False
+        t0 = time.perf_counter()
+        rep.engine = self._boot_engine(rep.idx)
+        reboot_s = time.perf_counter() - t0
+        progs = rep.engine.syscore.report()["programs"]
+        warm = (self.store is not None and len(progs) > 0 and
+                all(p["source"] == "store" for p in progs.values()))
+        replayed = 0
+        for rec in rep.journal.unfinished():
+            req = rep.engine.submit(
+                np.asarray(rec["prompt"], np.int32), rec["max_new"],
+                arrival_time=0.0, rid=rec["rid"])
+            assert req is not None, \
+                f"replay of rid {rec['rid']} rejected on a fresh engine"
+            self.owner[rec["rid"]] = rep.idx
+            replayed += 1
+        rec = rep.recoveries[-1]
+        rec.update({
+            "reboot_s": reboot_s,
+            "downtime_s": time.perf_counter() - rec.pop("t_kill"),
+            "warm": warm,
+            "compile_s": sum(p["compile_s"] for p in progs.values()),
+            "load_s": sum(p["load_s"] for p in progs.values()),
+            "replayed": replayed,
+        })
+        rep.state = "running"
+        return True
+
+    def _reroute(self, rep: Replica) -> int:
+        """Hand a failed replica's unfinished requests to survivors."""
+        moved = 0
+        for r in rep.journal.unfinished():
+            target = self._route_submit(
+                np.asarray(r["prompt"], np.int32), r["max_new"],
+                r.get("arrival_time", 0.0), r["rid"])
+            if target is None:
+                break                 # survivors full; retry next loop pass
+            rep.journal.mark_moved(r["rid"])
+            moved += 1
+        self.rerouted += moved
+        return moved
+
+    # -- request path ---------------------------------------------------------
+    def _route_submit(self, prompt, max_new: int, arrival_time: float,
+                      rid: int) -> Optional[int]:
+        """Try replicas in router order until one admits; returns the
+        admitting replica index (journaled) or None if every live replica
+        refused."""
+        live = {r.idx: r for r in self.replicas if r.state == "running"}
+        for idx in self.router.rank(
+                prompt, {i: r.engine.snapshot() for i, r in live.items()}):
+            rep = live[idx]
+            req = rep.engine.submit(prompt, max_new,
+                                    arrival_time=arrival_time, rid=rid)
+            if req is not None:
+                rep.journal.append_submit(rid, prompt, max_new, arrival_time)
+                self.owner[rid] = idx
+                return idx
+        return None
+
+    def submit(self, prompt, max_new: int = 16,
+               arrival_time: float = 0.0) -> Optional[int]:
+        """Route one request into the cluster; returns its GLOBAL rid, or
+        None when every live replica's admission queue refused it."""
+        prompt = np.asarray(prompt, np.int32)
+        if not any(r.state == "running" for r in self.replicas):
+            raise ClusterError("no live replicas to route to")
+        idx = self._route_submit(prompt, max_new, arrival_time,
+                                 self._next_rid)
+        if idx is None:
+            self.rejected += 1
+            return None
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    # -- telemetry ------------------------------------------------------------
+    def _pump(self, rep: Replica):
+        """Collect completions and new telemetry from a live replica —
+        continuously, so a later crash can only lose the in-flight tail,
+        never already-collected results or metrics."""
+        eng = rep.engine
+        completed = eng.completed
+        while rep._collected < len(completed):
+            r = completed[rep._collected]
+            rep._collected += 1
+            # a replayed duplicate (request finished elsewhere after a
+            # reroute race) keeps the FIRST collected stream; greedy
+            # determinism makes both identical anyway
+            if r.rid not in self.streams:
+                self.streams[r.rid] = list(r.generated)
+                self._completed_order.append(r.rid)
+            rep.journal.mark_done(r.rid, r.generated)
+            rep.served += 1
+        m = eng.syscore.hostcalls.metrics
+        ch = m.get(METRIC_TTFT_MS, [])
+        self._ttft_ms.extend(ch[rep._ttft_off:])
+        rep._ttft_off = len(ch)
+        ch = m.get(METRIC_DECODE_MS, [])
+        new = ch[rep._dec_off:]
+        rep._dec_off = len(ch)
+        rep.acc_decode_ms += sum(new)
+        rep._pending_step_ms.extend(new)
+        rep.acc_decode_tokens += eng.decode_tokens - rep._dec_tok_seen
+        rep._dec_tok_seen = eng.decode_tokens
+
+    def _health_check(self, rep: Replica):
+        """Feed the step latencies accumulated since the last check into
+        this replica's StragglerMonitor (escalations surface in
+        :meth:`health`; the re-mesh policy hook is the elastic-scale
+        roadmap item)."""
+        for ms in rep._pending_step_ms:
+            rep.monitor.observe(ms / 1e3)
+        rep._pending_step_ms.clear()
+
+    def health(self) -> List[Dict[str, Any]]:
+        """Point-in-time fleet health: per replica, its lifecycle state,
+        restart count, load snapshot and straggler summary."""
+        out = []
+        for rep in self.replicas:
+            h: Dict[str, Any] = {
+                "replica": rep.idx, "state": rep.state,
+                "restarts": rep.restarts,
+                "straggler": rep.monitor.summary(),
+            }
+            if rep.state == "running":
+                snap = rep.engine.snapshot()
+                h.update(queue_depth=snap["queue_depth"],
+                         active=snap["active"],
+                         arena_occupancy=snap["arena_occupancy"])
+            out.append(h)
+        return out
+
+    # -- main loop ------------------------------------------------------------
+    def _pending(self) -> bool:
+        running = [r for r in self.replicas if r.state == "running"]
+        if any(r.engine.has_work for r in running):
+            return True
+        if any(r.state == "dead" for r in self.replicas):
+            return True               # a reboot (and maybe a replay) is owed
+        stranded = [r for r in self.replicas
+                    if r.state == "failed" and r.journal.unfinished()]
+        if stranded and not running:
+            raise ClusterError(
+                "all replicas failed with requests outstanding: "
+                f"{[r.idx for r in stranded]}")
+        return bool(stranded)
+
+    def run(self, max_ticks: int = 100_000) -> Dict[str, Any]:
+        """Serve until every journaled request completes (or ``max_ticks``
+        supervisor passes).  Stats are a window over THIS call, like
+        ``ServingEngine.run``."""
+        t0 = time.perf_counter()
+        done0 = len(self._completed_order)
+        ttft0 = len(self._ttft_ms)
+        dec_tok0 = sum(r.acc_decode_tokens for r in self.replicas)
+        dec_ms0 = sum(r.acc_decode_ms for r in self.replicas)
+        ticks0 = [(r.ticks, r.served) for r in self.replicas]
+        ticks = 0
+        while ticks < max_ticks and self._pending():
+            progressed = False
+            for rep in self.replicas:
+                if rep.state == "failed":
+                    if rep.journal.unfinished():
+                        progressed |= self._reroute(rep) > 0
+                    continue
+                if rep.state == "dead":
+                    progressed |= self._maybe_restart(rep)
+                    continue
+                if not rep.engine.has_work:
+                    continue
+                try:
+                    rep.engine.tick()
+                except SimulatedFailure as e:
+                    self._on_crash(rep, e)
+                    progressed = True
+                    continue
+                rep.ticks += 1
+                progressed = True
+                self._pump(rep)
+                if rep.ticks % self.config.health_interval == 0:
+                    self._health_check(rep)
+            ticks += 1
+            if not progressed:
+                # only restart backoffs can stall the loop; wait them out
+                time.sleep(1e-3)
+        wall = time.perf_counter() - t0
+        new_rids = self._completed_order[done0:]
+        tokens = sum(len(self.streams[rid]) for rid in new_rids)
+        ttft = sorted(self._ttft_ms[ttft0:])
+        dec_tok = sum(r.acc_decode_tokens for r in self.replicas) - dec_tok0
+        dec_s = (sum(r.acc_decode_ms for r in self.replicas) - dec_ms0) / 1e3
+        stats: Dict[str, Any] = {
+            "requests": len(new_rids),
+            "tokens": tokens,
+            "wall_s": wall,
+            "tok_per_s": tokens / wall if wall else 0.0,
+            "ticks": ticks,
+            "replicas": len(self.replicas),
+            "kills": self.kills,
+            "rerouted": self.rerouted,
+            "rejected": self.rejected,
+            "decode_tokens": dec_tok,
+            # fleet-aggregate decode throughput over decode-program wall
+            # time only (same basis as BENCH_fused/BENCH_tp)
+            "agg_decode_tok_per_s": dec_tok / dec_s if dec_s else 0.0,
+            "ttft_p99_ms": (ttft[min(len(ttft) - 1,
+                                     int(0.99 * len(ttft)))]
+                            if ttft else None),
+            "recoveries": [dict(rec) for rep in self.replicas
+                           for rec in rep.recoveries],
+            "per_replica": [
+                {"replica": rep.idx, "state": rep.state,
+                 "ticks": rep.ticks - tk0, "served": rep.served - sv0,
+                 "restarts": rep.restarts,
+                 "decode_tokens": rep.acc_decode_tokens,
+                 "decode_tok_per_s": (rep.acc_decode_tokens /
+                                      (rep.acc_decode_ms / 1e3)
+                                      if rep.acc_decode_ms else 0.0),
+                 "escalations": rep.monitor.escalations}
+                for rep, (tk0, sv0) in zip(self.replicas, ticks0)],
+        }
+        return stats
+
+    # -- introspection --------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        rep: Dict[str, Any] = {
+            "replicas": len(self.replicas),
+            "router": self.config.router,
+            "kills": self.kills,
+            "rerouted": self.rerouted,
+            "health": self.health(),
+        }
+        if self.store is not None:
+            rep["store"] = self.store.report()
+        return rep
+
+    def close(self):
+        for rep in self.replicas:
+            rep.journal.close()

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import hashlib
 import inspect
+import itertools
 import json
 import os
 import pickle
@@ -254,6 +255,23 @@ class ProgramStore:
     Writes are atomic (tmp + rename) so a crashed writer never corrupts a
     warm-boot path; reads tolerate any unpickle failure by reporting a
     miss (the caller recompiles and overwrites).
+
+    Concurrent sharing: ONE store directory may be open in many executors
+    at once (a serving cluster's replicas and their failover reboots all
+    warm-load from the same dir).  The safety contract:
+
+      * every write lands under a unique temp name (pid + per-process
+        sequence — two same-process executors never collide) and becomes
+        visible only via an atomic ``os.replace``, so a reader sees either
+        the old complete entry or the new complete entry, never a partial;
+      * racing writers of the same digest are last-writer-wins — both
+        payloads decode the same program, so either outcome is correct;
+      * a reader that loses a race with ``clear()`` (file vanishes between
+        the existence check and the open) reports a plain miss;
+      * corruption of a shared entry degrades exactly one executor to the
+        compile-and-store path, which atomically heals the entry for
+        everyone else; executors that already installed from it are
+        unaffected (the deserialized executable owns no file handle).
     """
 
     def __init__(self, directory):
@@ -295,20 +313,37 @@ class ProgramStore:
         return (self.directory / (self.digest(spec, mesh) + ".pkl")).exists()
 
     # -- write path ---------------------------------------------------------
+    _tmp_seq = itertools.count()     # class-wide: unique across same-process
+                                     # stores sharing one directory
+
+    def _atomic_write(self, name: str, write_fn) -> Path:
+        """Write ``<dir>/<name>`` atomically: ``write_fn(fileobj)`` into a
+        unique temp file, then ``os.replace`` into place (overwrites a
+        racing writer's entry whole — never interleaves with it)."""
+        final = self.directory / name
+        tmp = self.directory / \
+            f".tmp_{name}_{os.getpid()}_{next(self._tmp_seq)}"
+        try:
+            with tmp.open("wb") as f:
+                write_fn(f)
+            os.replace(tmp, final)
+        finally:
+            tmp.unlink(missing_ok=True)
+        return final
+
     def put(self, spec: ProgramSpec, payload: bytes, in_tree, out_tree,
             mesh=None) -> Path:
         digest = self.digest(spec, mesh)
-        final = self.directory / (digest + ".pkl")
-        tmp = self.directory / (f".tmp_{digest}_{os.getpid()}.pkl")
-        with tmp.open("wb") as f:
-            pickle.dump((payload, in_tree, out_tree), f,
-                        protocol=pickle.HIGHEST_PROTOCOL)
-        tmp.rename(final)
+        final = self._atomic_write(
+            digest + ".pkl",
+            lambda f: pickle.dump((payload, in_tree, out_tree), f,
+                                  protocol=pickle.HIGHEST_PROTOCOL))
         meta = {"key": spec.key, "fingerprint": spec.fingerprint,
                 "mesh": _mesh_desc(mesh), "env": self._env_key(),
                 "bytes": len(payload), "time": time.time()}
-        (self.directory / (digest + ".json")).write_text(
-            json.dumps(meta, indent=1))
+        self._atomic_write(
+            digest + ".json",
+            lambda f: f.write(json.dumps(meta, indent=1).encode()))
         self.puts += 1
         return final
 

@@ -32,7 +32,11 @@ from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 __all__ = ["PagingConfig", "SpecConfig", "HorizonConfig", "ShardConfig",
-           "EngineConfig"]
+           "EngineConfig", "ClusterConfig", "ROUTER_POLICIES"]
+
+# router policies a ClusterConfig may name (repro.cluster.router implements
+# them; the tuple lives here so config validation needs no cluster import)
+ROUTER_POLICIES = ("least_loaded", "round_robin", "prefix_affinity")
 
 
 @dataclass(frozen=True)
@@ -229,3 +233,78 @@ class EngineConfig:
                   if spec_k is not None else None),
             horizon=(HorizonConfig(length=horizon)
                      if horizon is not None and horizon >= 2 else None))
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """A multi-replica serving cluster, as one frozen value object
+    (repro.cluster): N identical :class:`EngineConfig` replicas behind one
+    router, supervised with health checks and warm failover.
+
+    engine: the per-replica engine config.  Its ``store_dir`` must be
+        unset — the cluster owns ONE shared program store
+        (``ClusterConfig.store_dir``) so every replica, and every
+        failover reboot, warm-loads from the same global-memory tier.
+    replicas: replica count (>= 1).
+    router: request-assignment policy (``ROUTER_POLICIES``):
+        ``least_loaded`` scores queue depth + slot occupancy + arena
+        pressure; ``round_robin`` cycles; ``prefix_affinity`` pins a
+        prompt's prefix hash to a preferred replica (falling back to
+        least-loaded when that replica cannot admit).
+    affinity_len: prompt-prefix tokens hashed by ``prefix_affinity``.
+    health_interval: supervisor ticks between health checks per replica
+        (each check feeds new step-latency telemetry into that replica's
+        StragglerMonitor).
+    max_restarts / backoff_s / backoff_factor: the serving-side restart
+        policy (repro.runtime.fault.RestartPolicy): a crashed replica is
+        rebooted at most ``max_restarts`` times, the n-th reboot delayed
+        ``backoff_s * backoff_factor**(n-1)`` seconds; past the limit its
+        unfinished requests re-route to surviving replicas.
+    store_dir: the SHARED ProgramStore directory (warm failover); ``None``
+        = no store, every reboot recompiles (cold failover).
+    journal_dir: directory for the durable per-replica request journals;
+        ``None`` keeps them in supervisor memory (kill-safe, not
+        process-crash-safe).
+    """
+    engine: EngineConfig = EngineConfig()
+    replicas: int = 2
+    router: str = "least_loaded"
+    affinity_len: int = 8
+    health_interval: int = 8
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    store_dir: Optional[str] = None
+    journal_dir: Optional[str] = None
+
+    def __post_init__(self):
+        assert self.replicas >= 1, self.replicas
+        assert self.router in ROUTER_POLICIES, \
+            (self.router, ROUTER_POLICIES)
+        assert self.affinity_len >= 1, self.affinity_len
+        assert self.health_interval >= 1, self.health_interval
+        assert self.max_restarts >= 0, self.max_restarts
+        assert self.backoff_s >= 0 and self.backoff_factor >= 1, \
+            (self.backoff_s, self.backoff_factor)
+        assert self.engine.store_dir is None, \
+            "the cluster owns the shared program store: set " \
+            "ClusterConfig.store_dir, not EngineConfig.store_dir"
+
+    def replace(self, **kw) -> "ClusterConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- dict round trip -----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ClusterConfig":
+        d = dict(d)
+        if isinstance(d.get("engine"), dict):
+            d["engine"] = EngineConfig.from_dict(d["engine"])
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise TypeError(
+                f"unknown ClusterConfig fields: {sorted(unknown)}")
+        return cls(**d)

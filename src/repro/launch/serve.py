@@ -121,16 +121,28 @@ class Request:
     prompt_len: int = 0
     slot: int = -1
     t_submit: float = 0.0            # wall-clock timestamps
-    t_first: float = 0.0
-    t_done: float = 0.0
+    t_first: Optional[float] = None  # None until the request is placed
+    t_done: Optional[float] = None   # None until it finishes
     needs_resume: bool = False       # preempted: KV lives in the pager, not
                                      # a slot; re-admission swaps in instead
                                      # of prefilling
     gen_at_admit: int = 0            # len(generated) at last (re)admission
 
     @property
-    def ttft_s(self) -> float:
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token; ``None`` for a request that was never
+        placed (still queued, rejected, or killed before admission) —
+        never garbage computed from a placeholder timestamp."""
+        if self.t_first is None:
+            return None
         return self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit-to-done wall latency; ``None`` until finished."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
 
 
 class ServingEngine:
@@ -183,7 +195,8 @@ class ServingEngine:
 
     def __init__(self, arch: str, config: Optional[EngineConfig] = None, *,
                  params=None, mesh=None,
-                 store: Optional[ProgramStore] = None, **legacy):
+                 store: Optional[ProgramStore] = None,
+                 fault_hook=None, **legacy):
         if config is None:
             config = EngineConfig.from_legacy_kwargs(**legacy)
             if legacy:
@@ -197,6 +210,10 @@ class ServingEngine:
                 f"legacy keyword arguments, not both: {sorted(legacy)}")
         self.config = config
         self.arch = arch
+        # injectable fault hook (cluster serving): called with the engine
+        # step count at the top of every tick(); raising SimulatedFailure
+        # (repro.runtime.fault) models this replica crashing mid-serving
+        self.fault_hook = fault_hook
         self.reduced = config.reduced
         self.cfg = registry.get_config(arch, reduced=config.reduced)
         assert not self.cfg.is_encdec, "decoder-only serving engine"
@@ -306,8 +323,15 @@ class ServingEngine:
 
     # -- request management ---------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 16,
-               arrival_time: float = 0.0) -> Optional[Request]:
-        """Enqueue a request; None if the bounded admission queue is full."""
+               arrival_time: float = 0.0,
+               rid: Optional[int] = None) -> Optional[Request]:
+        """Enqueue a request; None if the bounded admission queue is full.
+
+        ``rid`` pins the request id instead of taking the next engine-local
+        one — a cluster router assigns GLOBAL ids so a request keeps its
+        identity across replicas and failover replays (the internal
+        counter advances past any pinned id, so later default submissions
+        never collide)."""
         if len(self.queue) >= self.max_queue:
             self.rejected += 1
             return None
@@ -317,10 +341,12 @@ class ServingEngine:
                 self.arena_blocks:
             self.rejected += 1       # can never fit the arena, even alone
             return None
-        req = Request(rid=self._n_submitted, prompt=prompt, max_new=max_new,
+        if rid is None:
+            rid = self._n_submitted
+        req = Request(rid=int(rid), prompt=prompt, max_new=max_new,
                       arrival_time=arrival_time, prompt_len=len(prompt),
                       t_submit=time.perf_counter())
-        self._n_submitted += 1
+        self._n_submitted = max(self._n_submitted, int(rid) + 1)
         bisect.insort(self.queue, req,
                       key=lambda r: (r.arrival_time, r.rid))
         return req
@@ -705,12 +731,53 @@ class ServingEngine:
         self._step_metrics(dt, ran[0] if ran else 0.0, extra=extra)
         return dt
 
+    @property
+    def has_work(self) -> bool:
+        """True while any request is queued or occupies a slot."""
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def tick(self) -> bool:
+        """One SUPERVISED engine iteration — the step-level API a cluster
+        supervisor drives instead of ``run()``'s closed loop.
+
+        The injectable fault hook fires first (a
+        ``repro.runtime.fault.FaultInjector.check`` raising
+        SimulatedFailure models this replica crashing mid-serving; the
+        supervisor catches it, discards the engine and warm-reboots a
+        replacement), then one :meth:`step` runs.  Returns ``step()``'s
+        value: False when no work remains."""
+        if self.fault_hook is not None:
+            self.fault_hook(self.steps)
+        return self.step()
+
+    def snapshot(self) -> Dict[str, object]:
+        """Cheap point-in-time load view for a router/supervisor — host
+        bookkeeping only, no device sync.
+
+        ``inflight_rids`` is every request this engine currently owes an
+        answer for (queued or in a slot); a supervisor diffs it against
+        its journal to know what a crash would lose."""
+        active = [s for s in self.slots if s is not None]
+        snap: Dict[str, object] = {
+            "steps": self.steps,
+            "batch": self.batch,
+            "active": len(active),
+            "queue_depth": len(self.queue),
+            "max_queue": self.max_queue,
+            "inflight_rids": sorted([r.rid for r in active] +
+                                    [r.rid for r in self.queue]),
+            "completed": len(self.completed),
+            "arena_occupancy": (self.pager.arena_occupancy()
+                                if self.paged else 0.0),
+        }
+        return snap
+
     def step(self) -> bool:
         """One engine iteration: admit into free slots, then one decode
         advance — a fused horizon, a speculative verify or a single decode
         step — for every active slot.  Returns False when no work
         remains."""
-        if not (self.queue or any(s is not None for s in self.slots)):
+        if not self.has_work:
             return False
         self._admit()
         if any(s is not None for s in self.slots):
@@ -764,9 +831,12 @@ class ServingEngine:
             "tokens": toks,
             "wall_s": wall,
             "tok_per_s": toks / wall if wall else 0.0,
+            # latency stats are explicit None when this window placed or
+            # decoded nothing (e.g. every submitted request was killed
+            # before admission) — never a garbage mean over no samples
             "decode_p50_ms": (decode_ms[len(decode_ms) // 2]
-                              if decode_ms else 0.0),
-            "ttft_ms": sum(ttft_ms) / max(len(ttft_ms), 1),
+                              if decode_ms else None),
+            "ttft_ms": (sum(ttft_ms) / len(ttft_ms) if ttft_ms else None),
             "occupancy": sum(occ) / max(len(occ), 1),
             "decode_steps": self.decode_steps - dec_steps0,
             "decode_tokens": dec_toks,

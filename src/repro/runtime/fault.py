@@ -76,6 +76,33 @@ class StragglerMonitor:
                 "escalations": self.escalations}
 
 
+@dataclass(frozen=True)
+class RestartPolicy:
+    """Serving-side restart policy for a supervised replica.
+
+    A crashed replica may be rebooted at most ``max_restarts`` times over
+    its lifetime; the n-th reboot (n >= 1) waits
+    ``backoff_s * backoff_factor**(n-1)`` seconds first, so a replica that
+    crash-loops backs off exponentially instead of hammering the boot
+    path.  ``backoff_s = 0`` disables the delay entirely (tests and
+    deterministic benchmarks).  Past the limit the supervisor stops
+    rebooting and re-routes the replica's unfinished requests instead
+    (repro.cluster.supervisor)."""
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+
+    def allows(self, n_restart: int) -> bool:
+        """May restart attempt ``n_restart`` (1-based) proceed?"""
+        return n_restart <= self.max_restarts
+
+    def delay_s(self, n_restart: int) -> float:
+        """Back-off delay before restart attempt ``n_restart`` (1-based)."""
+        if self.backoff_s <= 0:
+            return 0.0
+        return self.backoff_s * self.backoff_factor ** (n_restart - 1)
+
+
 def run_with_restarts(run_fn: Callable[[int], int], *,
                       resume_step_fn: Callable[[], int],
                       max_restarts: int = 3,

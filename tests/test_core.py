@@ -462,3 +462,70 @@ def test_placement_dynamic_pages_evict_under_pressure():
         assert float(np.asarray(v)[0]) == i
         assert placed.dc_table.resident_bytes <= 2 * 32 * 4
     assert placed.dc_table.evictions >= 6
+
+
+# ---------------------------------------------------------------------------
+# C5 runtime: fault primitives the cluster supervisor builds on
+# ---------------------------------------------------------------------------
+def test_fault_injector_fires_once_per_listed_step():
+    from repro.runtime import FaultInjector
+    from repro.runtime.fault import SimulatedFailure
+    inj = FaultInjector(fail_at_steps=[2, 5])
+    for s in (0, 1):
+        inj.check(s)                       # unlisted steps pass silently
+    with pytest.raises(SimulatedFailure):
+        inj.check(2)
+    inj.check(2)                           # already fired: a reboot that
+    assert inj.fired == [2]                # replays step 2 must not re-die
+    with pytest.raises(SimulatedFailure):
+        inj.check(5)
+    assert inj.fired == [2, 5]
+
+
+def test_straggler_monitor_patience_resets_on_fast_step():
+    from repro.runtime import StragglerMonitor
+    m = StragglerMonitor(window=16, threshold=1.5, patience=3)
+    for _ in range(8):
+        m.observe(1.0)
+    # two slow steps, then a fast one: patience resets, no escalation
+    assert not m.observe(5.0) and not m.observe(5.0)
+    assert not m.observe(1.0) and m.flags == 0
+    # three *consecutive* slow steps escalate exactly once and re-arm
+    hits = [m.observe(5.0) for _ in range(3)]
+    assert hits == [False, False, True]
+    assert m.escalations == 1 and m.flags == 0
+
+
+def test_straggler_monitor_window_eviction_adapts_median():
+    from repro.runtime import StragglerMonitor
+    m = StragglerMonitor(window=8, threshold=1.5, patience=1)
+    for _ in range(8):
+        m.observe(1.0)
+    # after a full window of 4.0s steps the old 1.0s regime has been
+    # evicted: 4.0s is the new normal, not a straggle
+    for _ in range(8):
+        m.observe(4.0)
+    assert not m.observe(4.0)
+    s = m.summary()
+    assert s["median_s"] > 1.0 and s["p99_s"] >= s["median_s"]
+
+
+def test_straggler_monitor_needs_history_before_flagging():
+    from repro.runtime import StragglerMonitor
+    m = StragglerMonitor(patience=1)
+    # fewer than 5 samples: never flags, even on wild outliers
+    assert not any(m.observe(t) for t in (1.0, 100.0, 1.0, 100.0))
+    assert m.summary()["escalations"] == 0
+    assert StragglerMonitor().summary() == {"median_s": 0.0, "p99_s": 0.0,
+                                            "escalations": 0}
+
+
+def test_restart_policy_budget_and_exponential_backoff():
+    from repro.runtime.fault import RestartPolicy
+    p = RestartPolicy(max_restarts=2, backoff_s=0.5, backoff_factor=2.0)
+    assert p.allows(1) and p.allows(2) and not p.allows(3)
+    assert p.delay_s(1) == pytest.approx(0.5)
+    assert p.delay_s(2) == pytest.approx(1.0)
+    assert p.delay_s(3) == pytest.approx(2.0)
+    # backoff_s == 0 disables delay at every attempt (test configs)
+    assert RestartPolicy(backoff_s=0.0).delay_s(7) == 0.0

@@ -242,3 +242,95 @@ def test_store_pickle_layout_is_atomic(tmp_path):
     (pkl,) = tmp_path.glob("*.pkl")
     payload, in_tree, out_tree = pickle.loads(pkl.read_bytes())
     assert isinstance(payload, bytes) and len(payload) > 0
+
+
+# ---------------------------------------------------------------------------
+# Concurrent sharing: one store directory, many executors (the cluster
+# supervisor's warm-failover substrate — repro.cluster.supervisor)
+# ---------------------------------------------------------------------------
+def test_two_executors_share_one_store_dir(tmp_path):
+    """Executor A compiles-and-stores; executor B (its OWN store object,
+    same directory) installs every program by deserialization."""
+    w, x = _args()
+    a = Syscore(store=ProgramStore(tmp_path))
+    ha = a.hot_load(_spec())
+    want = np.asarray(ha.block(w, x))
+    if a.store.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+    b = Syscore(store=ProgramStore(tmp_path))
+    hb = b.hot_load(_spec())
+    rep = b.report()["programs"]["toy"]
+    assert rep["source"] == "store" and rep["compile_s"] == 0
+    np.testing.assert_array_equal(np.asarray(hb.block(w, x)), want)
+    # B's load did not perturb A's live handle
+    np.testing.assert_array_equal(np.asarray(ha.block(w, x)), want)
+
+
+def test_interleaved_warm_boots_compile_each_program_once(tmp_path):
+    """Two executors alternate first-touch on different programs; each
+    program is compiled exactly once fleet-wide, every other install is a
+    store hit."""
+    specs = [_spec(key=f"p{i}", context=f"v{i}") for i in range(4)]
+    a = Syscore(store=ProgramStore(tmp_path))
+    b = Syscore(store=ProgramStore(tmp_path))
+    owners = [a, b, a, b]              # who compiles each program first
+    for sc, spec in zip(owners, specs):
+        sc.hot_load(spec)
+    if a.store.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+    for sc, spec in zip(reversed(owners), specs):   # second-touch swapped
+        sc.hot_load(spec)
+    for sc in (a, b):
+        progs = sc.report()["programs"]
+        assert len(progs) == 4
+        compiled = [k for k, v in progs.items() if v["source"] == "compile"]
+        loaded = [k for k, v in progs.items() if v["source"] == "store"]
+        assert len(compiled) == 2 and len(loaded) == 2, progs
+    assert a.store.puts + b.store.puts == 4
+    assert ProgramStore(tmp_path).report()["entries"] == 4
+
+
+def test_corrupt_entry_while_shared_degrades_one_reader_and_heals(tmp_path):
+    """Corrupting a shared entry on disk sends the NEXT reader down the
+    compile path — which re-puts and heals the entry for everyone after —
+    while executors already holding the program keep serving."""
+    w, x = _args()
+    a = Syscore(store=ProgramStore(tmp_path))
+    ha = a.hot_load(_spec())
+    want = np.asarray(ha.block(w, x))
+    if a.store.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+    for p in tmp_path.glob("*.pkl"):
+        p.write_bytes(b"torn write garbage")
+    # reader B: miss -> compile -> re-put (the heal)
+    b_store = ProgramStore(tmp_path)
+    b = Syscore(store=b_store)
+    hb = b.hot_load(_spec())
+    assert b.report()["programs"]["toy"]["source"] == "compile"
+    assert b_store.misses >= 1 and b_store.puts == 1
+    np.testing.assert_array_equal(np.asarray(hb.block(w, x)), want)
+    # A's live handle never noticed
+    np.testing.assert_array_equal(np.asarray(ha.block(w, x)), want)
+    # reader C sees the healed entry: back on the load path
+    c = Syscore(store=ProgramStore(tmp_path))
+    c.hot_load(_spec())
+    assert c.report()["programs"]["toy"]["source"] == "store"
+
+
+def test_racing_puts_leave_no_tmp_residue_and_one_winner(tmp_path):
+    """Two stores putting the same fingerprint: last os.replace wins
+    whole-file; no .tmp_* residue, entry loads cleanly afterwards."""
+    s1, s2 = ProgramStore(tmp_path), ProgramStore(tmp_path)
+    a = Syscore(store=s1)
+    a.hot_load(_spec())
+    if s1.puts == 0:
+        pytest.skip("executable serialization unavailable on this jax")
+    b = Syscore(store=s2)
+    handle = b.hot_load(_spec())
+    # force a second put of the same entry through store 2
+    payload, in_tree, out_tree = a.serialize("toy")
+    s2.put(_spec(), payload, in_tree, out_tree)
+    assert not list(tmp_path.glob(".tmp_*"))
+    assert ProgramStore(tmp_path).get(_spec()) is not None
+    w, x = _args()
+    assert np.isfinite(np.asarray(handle.block(w, x))).all()
