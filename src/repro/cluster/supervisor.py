@@ -73,6 +73,11 @@ class Replica:
     restarts: int = 0                 # crash count == restart attempts used
     backoff_until: float = 0.0        # perf_counter deadline for the reboot
     recoveries: List[Dict[str, Any]] = field(default_factory=list)
+    # journal records a reboot still owes the fresh engine: a crash can
+    # leave up to max_queue + batch unfinished requests, more than the
+    # bounded admission queue holds at once, so replay drains under
+    # back-pressure across supervisor passes instead of in one burst
+    replay_pending: List[Dict[str, Any]] = field(default_factory=list)
     # telemetry accumulators (survive engine swaps; offsets reset per boot)
     acc_decode_tokens: int = 0
     acc_decode_ms: float = 0.0
@@ -154,6 +159,9 @@ class Supervisor:
         rep.engine = None
         rep.restarts += 1
         rep.reset_offsets()
+        # still-unreplayed records stay journaled (never submitted, never
+        # marked done); the next reboot recomputes the full replay set
+        rep.replay_pending.clear()
         if self.policy.allows(rep.restarts):
             rep.state = "dead"
             rep.backoff_until = (time.perf_counter() +
@@ -177,15 +185,6 @@ class Supervisor:
         progs = rep.engine.syscore.report()["programs"]
         warm = (self.store is not None and len(progs) > 0 and
                 all(p["source"] == "store" for p in progs.values()))
-        replayed = 0
-        for rec in rep.journal.unfinished():
-            req = rep.engine.submit(
-                np.asarray(rec["prompt"], np.int32), rec["max_new"],
-                arrival_time=0.0, rid=rec["rid"])
-            assert req is not None, \
-                f"replay of rid {rec['rid']} rejected on a fresh engine"
-            self.owner[rec["rid"]] = rep.idx
-            replayed += 1
         rec = rep.recoveries[-1]
         rec.update({
             "reboot_s": reboot_s,
@@ -193,10 +192,41 @@ class Supervisor:
             "warm": warm,
             "compile_s": sum(p["compile_s"] for p in progs.values()),
             "load_s": sum(p["load_s"] for p in progs.values()),
-            "replayed": replayed,
+            "replayed": 0,
         })
         rep.state = "running"
+        rep.replay_pending = rep.journal.unfinished()
+        self._drain_replay(rep)
         return True
+
+    def _drain_replay(self, rep: Replica) -> int:
+        """Submit a rebooted replica's pending journal records into its
+        fresh engine, mirroring :meth:`_reroute`'s back-pressure handling:
+        a crash can strand more requests (queue + live batch) than the
+        bounded admission queue holds, so on a refusal the remainder stays
+        journaled in ``replay_pending`` and the main loop retries every
+        pass as the engine's queue drains.
+
+        Replay resets ``arrival_time`` to 0.0 — unlike ``_reroute``, which
+        preserves it — because the fresh engine's step clock restarts at 0:
+        the original arrival times would defer admission far into the new
+        clock's future.  0.0 makes every record immediately eligible, and
+        the admission key ``(arrival_time, rid)`` then orders the replays
+        by rid, i.e. the original submission order."""
+        replayed = 0
+        while rep.replay_pending:
+            rec = rep.replay_pending[0]
+            req = rep.engine.submit(
+                np.asarray(rec["prompt"], np.int32), rec["max_new"],
+                arrival_time=0.0, rid=rec["rid"])
+            if req is None:
+                break                 # queue full; retry next loop pass
+            rep.replay_pending.pop(0)
+            self.owner[rec["rid"]] = rep.idx
+            replayed += 1
+        if replayed and rep.recoveries:
+            rep.recoveries[-1]["replayed"] += replayed
+        return replayed
 
     def _reroute(self, rep: Replica) -> int:
         """Hand a failed replica's unfinished requests to survivors."""
@@ -306,7 +336,7 @@ class Supervisor:
     # -- main loop ------------------------------------------------------------
     def _pending(self) -> bool:
         running = [r for r in self.replicas if r.state == "running"]
-        if any(r.engine.has_work for r in running):
+        if any(r.engine.has_work or r.replay_pending for r in running):
             return True
         if any(r.state == "dead" for r in self.replicas):
             return True               # a reboot (and maybe a replay) is owed
@@ -319,15 +349,18 @@ class Supervisor:
         return bool(stranded)
 
     def run(self, max_ticks: int = 100_000) -> Dict[str, Any]:
-        """Serve until every journaled request completes (or ``max_ticks``
-        supervisor passes).  Stats are a window over THIS call, like
+        """Serve until every journaled request completes or ``max_ticks``
+        supervisor passes elapse — ``stats["completed_all"]`` /
+        ``stats["unfinished"]`` distinguish a drained cluster from a
+        truncated run.  Stats are a window over THIS call, like
         ``ServingEngine.run``."""
         t0 = time.perf_counter()
         done0 = len(self._completed_order)
         ttft0 = len(self._ttft_ms)
         dec_tok0 = sum(r.acc_decode_tokens for r in self.replicas)
         dec_ms0 = sum(r.acc_decode_ms for r in self.replicas)
-        ticks0 = [(r.ticks, r.served) for r in self.replicas]
+        rep0 = [(r.ticks, r.served, r.acc_decode_tokens, r.acc_decode_ms)
+                for r in self.replicas]
         ticks = 0
         while ticks < max_ticks and self._pending():
             progressed = False
@@ -339,6 +372,8 @@ class Supervisor:
                 if rep.state == "dead":
                     progressed |= self._maybe_restart(rep)
                     continue
+                if rep.replay_pending:
+                    progressed |= self._drain_replay(rep) > 0
                 if not rep.engine.has_work:
                     continue
                 try:
@@ -357,6 +392,10 @@ class Supervisor:
                 # only restart backoffs can stall the loop; wait them out
                 time.sleep(1e-3)
         wall = time.perf_counter() - t0
+        # outstanding work across the fleet's journals (moved records count
+        # once, in their new owner's journal): non-zero means this call hit
+        # max_ticks before draining, not that the cluster is done
+        unfinished = sum(len(r.journal.unfinished()) for r in self.replicas)
         new_rids = self._completed_order[done0:]
         tokens = sum(len(self.streams[rid]) for rid in new_rids)
         ttft = sorted(self._ttft_ms[ttft0:])
@@ -372,6 +411,8 @@ class Supervisor:
             "kills": self.kills,
             "rerouted": self.rerouted,
             "rejected": self.rejected,
+            "unfinished": unfinished,
+            "completed_all": unfinished == 0,
             "decode_tokens": dec_tok,
             # fleet-aggregate decode throughput over decode-program wall
             # time only (same basis as BENCH_fused/BENCH_tp)
@@ -385,12 +426,13 @@ class Supervisor:
                 {"replica": rep.idx, "state": rep.state,
                  "ticks": rep.ticks - tk0, "served": rep.served - sv0,
                  "restarts": rep.restarts,
-                 "decode_tokens": rep.acc_decode_tokens,
-                 "decode_tok_per_s": (rep.acc_decode_tokens /
-                                      (rep.acc_decode_ms / 1e3)
-                                      if rep.acc_decode_ms else 0.0),
+                 "decode_tokens": rep.acc_decode_tokens - dtok0,
+                 "decode_tok_per_s": ((rep.acc_decode_tokens - dtok0) /
+                                      ((rep.acc_decode_ms - dms0) / 1e3)
+                                      if rep.acc_decode_ms > dms0 else 0.0),
                  "escalations": rep.monitor.escalations}
-                for rep, (tk0, sv0) in zip(self.replicas, ticks0)],
+                for rep, (tk0, sv0, dtok0, dms0)
+                in zip(self.replicas, rep0)],
         }
         return stats
 

@@ -226,6 +226,39 @@ def test_cluster_kill_token_exact_zero_lost_warm_recovery(tmp_path):
     sup.close()
 
 
+def test_cluster_replay_respects_admission_backpressure(tmp_path):
+    """A crash strands live-batch + full-queue requests — more unfinished
+    records than the fresh engine's bounded admission queue holds at
+    once.  Replay must drain under back-pressure across supervisor
+    passes (regression: it used to assert on the first refusal, killing
+    the whole cluster mid-recovery)."""
+    ecfg = _engine_cfg(max_queue=2)
+    ccfg = ClusterConfig(engine=ecfg, replicas=1, max_restarts=1,
+                         store_dir=str(tmp_path / "store"))
+    inj = FaultInjector(fail_at_steps=[3])
+    sup = Supervisor(ARCH, ccfg, fault_hooks={0: inj.check})
+    prompts = [np.asarray([3 + i, 5, 7, 11], np.int32) for i in range(4)]
+    rids = [sup.submit(p, max_new=6) for p in prompts[:2]]
+    sup.run(max_ticks=2)          # both admitted into slots; queue empty
+    rids += [sup.submit(p, max_new=6) for p in prompts[2:]]
+    assert rids == [0, 1, 2, 3]
+    stats = sup.run()
+    assert inj.fired == [3] and stats["kills"] == 1
+    rec = stats["recoveries"][0]
+    # the overflow really happened: the reboot owed more replays than
+    # max_queue admits in one burst, and every one of them landed
+    assert rec["replayed"] == 4 > ecfg.max_queue
+    assert stats["completed_all"] and stats["unfinished"] == 0
+    assert sorted(sup.streams) == rids
+    single = ServingEngine(ARCH, ecfg, params=sup.params,
+                           store=ProgramStore(tmp_path / "store"))
+    for p, rid in zip(prompts, rids):
+        ref = single.submit(p, max_new=6)   # one at a time: the reference
+        single.run()                        # engine shares the tiny queue
+        assert sup.streams[rid] == ref.generated, rid
+    sup.close()
+
+
 def test_cluster_restart_budget_exhausted_reroutes_to_survivors(tmp_path):
     """max_restarts=0: the killed replica fails permanently and its
     unfinished requests complete on the survivors — still zero lost."""
@@ -284,6 +317,31 @@ def test_cluster_health_and_per_replica_stats(tmp_path):
     assert any(h["straggler"]["median_s"] > 0 for h in health)
     rep = sup.report()
     assert rep["replicas"] == 2 and rep["store"]["entries"] > 0
+
+
+def test_cluster_run_reports_truncation_and_windowed_stats(tmp_path):
+    """run() exiting via max_ticks is detectable (unfinished /
+    completed_all), and per-replica decode stats window over the call
+    like the fleet aggregates instead of reporting lifetime totals."""
+    ccfg = ClusterConfig(engine=_engine_cfg(), replicas=2,
+                         store_dir=str(tmp_path / "store"))
+    sup = Supervisor(ARCH, ccfg)
+    for p, m in _workload(4, seed=3):
+        sup.submit(p, max_new=m)
+    part = sup.run(max_ticks=1)        # one pass cannot finish anything
+    assert part["unfinished"] > 0 and not part["completed_all"]
+    assert part["requests"] == 0
+    full = sup.run()
+    assert full["completed_all"] and full["unfinished"] == 0
+    assert full["requests"] == 4
+    # per-replica and fleet-level decode counters share one window
+    assert sum(p["decode_tokens"] for p in full["per_replica"]) == \
+        full["decode_tokens"]
+    idle = sup.run()                   # drained cluster: an empty window
+    assert idle["requests"] == 0 and idle["completed_all"]
+    assert all(p["decode_tokens"] == 0 and p["decode_tok_per_s"] == 0.0
+               for p in idle["per_replica"])
+    sup.close()
 
 
 def test_cluster_warm_boots_second_replica_from_first_compile(tmp_path):
