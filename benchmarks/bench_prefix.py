@@ -1,0 +1,142 @@
+"""Cross-request prefix sharing benchmark (ISSUE 8 tentpole gate).
+
+Serves a workload dominated by one popular prompt prefix: the first
+request prefills and PUBLISHES its prompt blocks into the prefix trie;
+every later request with the same head maps those blocks read-only
+(refcount bump, zero prefill compute) and runs only its suffix through
+the ``prefill_offset`` program.  The gate: warm-prefix TTFT under 10% of
+the cold prefill TTFT, with every shared block mapped by at least two
+requests over the run, streams token-exact vs the cold request, and the
+arena's ownership/refcount invariants intact afterwards.  Records the
+trajectory into ``BENCH_prefix.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+PREFIX_JSON = REPO / "BENCH_prefix.json"
+
+N_WARM = 4                    # warm repeats of the popular prompt
+
+
+def run(smoke: bool = False, arch: str = "qwen3-0.6b"):
+    from repro.engine_config import EngineConfig, PagingConfig, PrefixConfig
+    from repro.launch.serve import ServingEngine
+
+    kv_block = 8
+    # sizes keep cold prefill well above the fixed warm dispatch cost
+    # (~1.5ms): the gate measures skipped compute, not launch overhead
+    max_len, prompt_len = (160, 129) if smoke else (320, 257)
+    # prompt_len = n*kv_block + 1: the whole head matches (capped strictly
+    # below the final position), leaving a 1-token suffix — so the warm
+    # program is sized to its minimum (max_suffix=1, a single decode step)
+    # and TTFT measures pure suffix compute, not padded scan width
+    prefill_len = prompt_len + 7
+    config = EngineConfig(
+        reduced=True, batch=2, max_len=max_len, prefill_len=prefill_len,
+        clock="wall", seed=0,
+        paging=PagingConfig(kv_block=kv_block),
+        prefix=PrefixConfig(max_suffix=1))
+    eng = ServingEngine(arch, config)
+    assert eng._prefix_tier1, "benchmark needs the warm (skip-prefill) path"
+    rng = np.random.default_rng(0)
+
+    # untimed warmup: first executions of prefill_slot / prefill_offset /
+    # decode on a throwaway prefix so the timed phase is dispatch-only
+    warmup = rng.integers(1, 500, size=prompt_len).astype(np.int32)
+    for p in (warmup, warmup.copy()):
+        eng.submit(p, max_new=2)
+        eng.run()
+
+    def serve_one(prompt):
+        req = eng.submit(prompt, max_new=4)
+        eng.run()
+        assert req.done and req.ttft_s is not None
+        return req
+
+    base = rng.integers(1, 500, size=prompt_len).astype(np.int32)
+    cold = serve_one(base)                   # prefills + publishes the head
+    warm = [serve_one(base.copy()) for _ in range(N_WARM)]
+
+    shared_blocks = (prompt_len - 1) // kv_block
+    assert eng.warm_admissions == 1 + N_WARM, eng.warm_admissions
+    assert eng.prefix_tokens_reused >= (1 + N_WARM) * shared_blocks * kv_block
+    # sharing degree: every block of the popular head served >= 2 requests
+    popular = [sb for sb in eng.pager._shared.values() if sb.hits >= 2]
+    assert len(popular) >= shared_blocks, (len(popular), shared_blocks)
+    token_exact = all(w.generated == cold.generated for w in warm)
+    assert token_exact, "warm-prefix stream diverged from the cold stream"
+    eng.pager.check_invariants()
+
+    cold_ttft = cold.ttft_s
+    warm_ttfts = [w.ttft_s for w in warm]
+    ratio = min(warm_ttfts) / cold_ttft
+    # warm TTFT bottoms out at ~2ms of per-step dispatch (block-table
+    # scatter + program launch), so the 10x gate needs a cold prefill that
+    # dwarfs it: enforced at full size; smoke only sanity-checks the trend
+    limit = 0.50 if smoke else 0.10
+    assert ratio < limit, \
+        f"warm TTFT {min(warm_ttfts) * 1e3:.2f}ms not < {limit:.0%} of " \
+        f"cold {cold_ttft * 1e3:.2f}ms"
+
+    rep = eng.pager.report()["prefix"]
+    record = {
+        "bench": "prefix",
+        "arch": f"{arch}(reduced)",
+        "batch": 2,
+        "max_len": max_len,
+        "prompt_len": prompt_len,
+        "kv_block": kv_block,
+        "max_suffix": 1,
+        "shared_blocks": shared_blocks,
+        "warm_requests": N_WARM,
+        "ttft": {"cold_ms": cold_ttft * 1e3,
+                 "warm_ms": [t * 1e3 for t in warm_ttfts],
+                 "warm_min_ms": min(warm_ttfts) * 1e3,
+                 "warm_mean_ms": float(np.mean(warm_ttfts)) * 1e3,
+                 "warm_over_cold": ratio},
+        "prefix": {k: rep[k] for k in
+                   ("trie_blocks", "resident_shared", "prefix_hits",
+                    "published_blocks", "shared_faults",
+                    "shared_evictions")},
+        "store": rep["store"],
+        "engine": {"warm_admissions": eng.warm_admissions,
+                   "prefix_admissions": eng.prefix_admissions,
+                   "prefix_tokens_reused": eng.prefix_tokens_reused},
+        "env": {"jax": __import__("jax").__version__,
+                "backend": __import__("jax").default_backend()},
+        "token_exact": token_exact,
+    }
+    PREFIX_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return [
+        ("prefix_cold_ttft_ms", cold_ttft * 1e3,
+         f"full prefill of {prompt_len} tokens -> {PREFIX_JSON.name}"),
+        ("prefix_warm_ttft_ms", min(warm_ttfts) * 1e3,
+         f"suffix-only admission over {shared_blocks} shared blocks; "
+         f"mean={float(np.mean(warm_ttfts)) * 1e3:.3f}ms"),
+        ("prefix_warm_cold_ratio", ratio,
+         f"gate <{limit:.2f}; tokens_reused={eng.prefix_tokens_reused} "
+         f"token_exact={token_exact}"),
+    ]
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+    for name, value, derived in run(smoke=args.smoke, arch=args.arch):
+        print(f"{name},{value:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    main()

@@ -13,11 +13,14 @@ Policies (``repro.engine_config.ROUTER_POLICIES``):
     Cycle through live replicas in index order — the baseline policy and
     the fairest one when every request costs the same.
 ``prefix_affinity``
-    Hash the prompt's first ``affinity_len`` tokens to a preferred
-    replica, falling back to load order behind it.  Requests sharing a
-    system-prompt prefix then land on the same replica's KV cache — the
-    placement hook the cross-request prefix-sharing roadmap item plugs
-    into.
+    Route to the replica whose prefix trie already holds this prompt's
+    shared KV blocks: the supervisor feeds :meth:`Router.record` on every
+    successful admission, and later prompts with the same
+    ``affinity_len``-token prefix go there first (so cross-request prefix
+    sharing actually hits — a prefix published on replica 0 is worthless
+    to a request routed to replica 1).  Prefixes never seen before fall
+    back to a deterministic hash bucket over the live replicas; behind the
+    preferred replica, the rest rank by load.
 
 ``rank()`` returns ALL candidates best-first rather than a single pick:
 the caller walks the order until a replica actually admits (a full
@@ -35,15 +38,23 @@ from repro.engine_config import ROUTER_POLICIES
 
 __all__ = ["Router"]
 
+# sticky prefix->replica entries kept before the oldest are dropped; the
+# map only accelerates placement (a dropped entry degrades to the hash
+# bucket), so a small bound is safe
+STICKY_CAP = 4096
+
 
 class Router:
     """Pick a serving order over replicas for each incoming request."""
 
     def __init__(self, policy: str = "least_loaded", affinity_len: int = 8):
         assert policy in ROUTER_POLICIES, (policy, ROUTER_POLICIES)
+        assert affinity_len >= 1, affinity_len
         self.policy = policy
         self.affinity_len = affinity_len
         self._rr = 0                 # round-robin cursor
+        self._sticky: Dict[int, int] = {}   # affinity key -> replica whose
+                                            # trie holds the prefix
         self.routed = 0
 
     # -- scoring -------------------------------------------------------------
@@ -59,9 +70,32 @@ class Router:
 
     def _affinity_key(self, prompt) -> int:
         """Deterministic prefix hash (crc32 — NOT ``hash()``, which is
-        salted per process and would re-shuffle affinity every reboot)."""
+        salted per process and would re-shuffle affinity every reboot).
+
+        Total over every prompt shape: the prefix is padded to a FIXED
+        ``affinity_len`` width before hashing, so a prompt SHORTER than
+        ``affinity_len`` buckets by its content alone — unpadded, the
+        2-token prompt ``[7, 9]`` and the longer ``[7, 9, ...]`` hash
+        different byte lengths and can never share a bucket, while two
+        short prompts of different lengths could collide on a byte string
+        that means something else entirely.  -1 never appears as a token
+        id, so the pad is unambiguous.  An empty prompt is just the
+        all-pad key, not an error."""
         prefix = np.asarray(prompt, np.int32).ravel()[: self.affinity_len]
+        if prefix.size < self.affinity_len:
+            prefix = np.concatenate(
+                [prefix, np.full(self.affinity_len - prefix.size, -1,
+                                 np.int32)])
         return zlib.crc32(prefix.tobytes())
+
+    def record(self, prompt, replica: int):
+        """Placement feedback: ``prompt`` was actually admitted by
+        ``replica``, whose trie now holds (or will publish) its prefix
+        blocks — later prompts with the same prefix rank that replica
+        first.  Bounded FIFO: past STICKY_CAP the oldest entry drops."""
+        self._sticky[self._affinity_key(prompt)] = int(replica)
+        while len(self._sticky) > STICKY_CAP:
+            self._sticky.pop(next(iter(self._sticky)))
 
     # -- ranking -------------------------------------------------------------
     def rank(self, prompt, snapshots: Dict[int, Dict[str, object]]
@@ -70,7 +104,9 @@ class Router:
 
         ``snapshots`` maps replica index -> its engine snapshot and must
         contain only live replicas; dead ones are simply absent.  The
-        caller tries indices in order until one admits.
+        caller tries indices in order until one admits.  An EMPTY snapshot
+        map (every replica failed or draining) returns [] for every
+        policy — never a ZeroDivision out of the affinity modulus.
         """
         if not snapshots:
             return []
@@ -83,7 +119,12 @@ class Router:
             order = idx[start:] + idx[:start]
         elif self.policy == "prefix_affinity":
             idx = sorted(snapshots)
-            preferred = idx[self._affinity_key(prompt) % len(idx)]
+            key = self._affinity_key(prompt)
+            sticky = self._sticky.get(key)
+            if sticky is not None and sticky in snapshots:
+                preferred = sticky   # its trie already holds this prefix
+            else:
+                preferred = idx[key % len(idx)]
             order = [preferred] + [i for i in by_load if i != preferred]
         else:                        # least_loaded
             order = by_load

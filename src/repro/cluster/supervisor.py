@@ -123,6 +123,14 @@ class Supervisor:
         if store is None and self.config.store_dir is not None:
             store = ProgramStore(self.config.store_dir)
         self.store = store
+        # ONE PrefixStore for the whole fleet (prefix-sharing engines):
+        # published prefix blocks are host-DRAM state keyed by content, so
+        # a failover reboot re-seeds its trie from here and replayed
+        # requests keep hitting prefixes the dead engine published
+        self.prefix_store = None
+        if self.config.engine.prefix is not None:
+            from repro.core.paging import PrefixStore
+            self.prefix_store = PrefixStore()
         self.fault_hooks = dict(fault_hooks or {})
         self.params = params
         self.streams: Dict[int, List[int]] = {}    # rid -> final tokens
@@ -150,6 +158,7 @@ class Supervisor:
     def _boot_engine(self, idx: int) -> ServingEngine:
         return ServingEngine(self.arch, self.config.engine,
                              params=self.params, store=self.store,
+                             prefix_store=self.prefix_store,
                              fault_hook=self.fault_hooks.get(idx))
 
     def _on_crash(self, rep: Replica, err: Exception):
@@ -257,6 +266,11 @@ class Supervisor:
             if req is not None:
                 rep.journal.append_submit(rid, prompt, max_new, arrival_time)
                 self.owner[rid] = idx
+                if self.router.policy == "prefix_affinity":
+                    # placement feedback: this replica's trie now holds (or
+                    # will publish) the prompt's prefix blocks — route
+                    # later same-prefix prompts here first
+                    self.router.record(prompt, idx)
                 return idx
         return None
 
@@ -447,6 +461,8 @@ class Supervisor:
         }
         if self.store is not None:
             rep["store"] = self.store.report()
+        if self.prefix_store is not None:
+            rep["prefix_store"] = self.prefix_store.report()
         return rep
 
     def close(self):

@@ -33,13 +33,17 @@ class DCEntry:
     name: str
     loader: Callable[[], Any]       # host -> device materialization
     size_bytes: int
-    pinned: bool = False
+    pins: int = 0                   # pin refcount; > 0 = not evictable
     # populated when resident:
     value: Optional[Any] = None
     loaded_at: float = 0.0
     last_use: float = 0.0
     loads: int = 0
     hits: int = 0
+
+    @property
+    def pinned(self) -> bool:
+        return self.pins > 0
 
 
 class DynamicCallTable:
@@ -69,7 +73,7 @@ class DynamicCallTable:
                 f"page '{name}' ({size_bytes}B) exceeds arena capacity "
                 f"({self.capacity}B)")
         e = DCEntry(name=name, loader=loader, size_bytes=int(size_bytes),
-                    pinned=pinned)
+                    pins=1 if pinned else 0)
         self._entries[name] = e
         return e
 
@@ -149,6 +153,10 @@ class DynamicCallTable:
         e = self._entries.get(name)
         return e is not None and e.value is not None
 
+    def is_pinned(self, name: str) -> bool:
+        e = self._entries.get(name)
+        return e is not None and e.pinned
+
     @property
     def evictable_bytes(self) -> int:
         """Bytes reclaimable without touching pinned pages."""
@@ -156,10 +164,17 @@ class DynamicCallTable:
                    if e.value is not None and not e.pinned)
 
     def pin(self, name: str):
-        self._entries[name].pinned = True
+        """Increment a page's pin refcount.  Pins COUNT: a page shared by
+        several mappers (one cross-request KV prefix block mapped into N
+        block-table rows) stays unevictable until every mapper unpins —
+        boolean pinning would let the second mapper's release unprotect
+        the first's live mapping."""
+        self._entries[name].pins += 1
 
     def unpin(self, name: str):
-        self._entries[name].pinned = False
+        e = self._entries[name]
+        assert e.pins > 0, f"unpin of unpinned page '{name}'"
+        e.pins -= 1
 
     @property
     def resident_bytes(self) -> int:

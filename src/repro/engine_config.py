@@ -31,8 +31,9 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
-__all__ = ["PagingConfig", "SpecConfig", "HorizonConfig", "ShardConfig",
-           "EngineConfig", "ClusterConfig", "ROUTER_POLICIES"]
+__all__ = ["PagingConfig", "PrefixConfig", "SpecConfig", "HorizonConfig",
+           "ShardConfig", "EngineConfig", "ClusterConfig",
+           "ROUTER_POLICIES"]
 
 # router policies a ClusterConfig may name (repro.cluster.router implements
 # them; the tuple lives here so config validation needs no cluster import)
@@ -59,6 +60,31 @@ class PagingConfig:
         assert max_len % self.kv_block == 0, (max_len, self.kv_block)
         return (self.arena_blocks if self.arena_blocks is not None
                 else batch * (max_len // self.kv_block))
+
+
+@dataclass(frozen=True)
+class PrefixConfig:
+    """Cross-request prefix sharing over the paged KV arena
+    (repro.core.paging trie + PrefixStore).  Requires ``paging``.
+
+    max_suffix: static suffix capacity of the ``prefill_offset`` program —
+        the most tokens recomputed past a matched prefix on the warm
+        admission path; ``None`` -> ``2 * kv_block`` (the worst-case
+        remainder of a prompt whose whole head matched).  Longer
+        divergences fall back to the full prefill program: its storage is
+        still deduplicated (matched blocks map read-only; the block-table
+        write guard drops the recomputed duplicates), only the compute
+        saving is lost.
+    min_blocks: smallest trie match worth taking the warm path for —
+        below it the full prefill runs (shared mappings still apply).
+    """
+    max_suffix: Optional[int] = None
+    min_blocks: int = 1
+
+    def __post_init__(self):
+        assert self.max_suffix is None or self.max_suffix >= 1, \
+            self.max_suffix
+        assert self.min_blocks >= 1, self.min_blocks
 
 
 @dataclass(frozen=True)
@@ -121,6 +147,7 @@ class EngineConfig:
     group_prefill: bool = False
     store_dir: Optional[str] = None       # shorthand for ProgramStore(dir)
     paging: Optional[PagingConfig] = None
+    prefix: Optional[PrefixConfig] = None
     spec: Optional[SpecConfig] = None
     horizon: Optional[HorizonConfig] = None
     shard: ShardConfig = ShardConfig()
@@ -132,6 +159,10 @@ class EngineConfig:
         if self.paging is not None:
             assert self.max_len % self.paging.kv_block == 0, \
                 (self.max_len, self.paging.kv_block)
+        if self.prefix is not None:
+            assert self.paging is not None, \
+                "prefix sharing indexes paged KV blocks: set paging too"
+            assert self.resolved_prefix_suffix <= self.resolved_prefill_len
 
     # -- derived ------------------------------------------------------------
     @property
@@ -149,6 +180,15 @@ class EngineConfig:
     @property
     def horizon_length(self) -> Optional[int]:
         return self.horizon.length if self.horizon is not None else None
+
+    @property
+    def resolved_prefix_suffix(self) -> int:
+        """Static token capacity of the warm-path ``prefill_offset``
+        program (see :class:`PrefixConfig`)."""
+        assert self.prefix is not None
+        return (self.prefix.max_suffix
+                if self.prefix.max_suffix is not None
+                else 2 * self.paging.kv_block)
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -184,6 +224,13 @@ class EngineConfig:
         return repr((("horizon", self.horizon_length),
                      ("eos", self.eos_id)))
 
+    def prefix_context(self) -> str:
+        """Extra context for the ``prefill_offset`` program only: its
+        closure-captured suffix capacity.  The other programs' bytes do
+        not depend on prefix sharing at all, so engines with and without
+        it keep sharing their store entries."""
+        return repr((("prefix_suffix", self.resolved_prefix_suffix),))
+
     # -- dict round trip -----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         """Plain nested dict (JSON-serializable); inverse of from_dict."""
@@ -192,8 +239,9 @@ class EngineConfig:
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "EngineConfig":
         d = dict(d)
-        for key, sub in (("paging", PagingConfig), ("spec", SpecConfig),
-                         ("horizon", HorizonConfig), ("shard", ShardConfig)):
+        for key, sub in (("paging", PagingConfig), ("prefix", PrefixConfig),
+                         ("spec", SpecConfig), ("horizon", HorizonConfig),
+                         ("shard", ShardConfig)):
             v = d.get(key)
             if isinstance(v, dict):
                 d[key] = sub(**v)

@@ -92,7 +92,7 @@ from repro.core.hostcall import CALL_BATCH, CALL_METRIC, CALL_STEP_REPORT
 from repro.core.syscore import (METRIC_PROGRAM_COMPILE_MS,
                                 METRIC_PROGRAM_LOAD_MS)
 from repro.engine_config import (EngineConfig, HorizonConfig, PagingConfig,
-                                 ShardConfig, SpecConfig)
+                                 PrefixConfig, ShardConfig, SpecConfig)
 from repro.launch.mesh import serving_mesh
 from repro.models import registry, transformer
 from repro.sharding import make_rules, tree_shardings
@@ -108,6 +108,8 @@ METRIC_PAGE_FAULT = 6     # paged KV swap-in copied blocks from host (value
 METRIC_ARENA_OCCUPANCY = 7  # resident arena blocks / capacity, per decode step
 METRIC_SPEC_ACCEPT = 8    # accepted / proposed draft tokens, per verify step
 METRIC_HORIZON_TOKENS = 9  # tokens emitted per fused decode-horizon dispatch
+METRIC_PREFIX_HIT = 10    # prompt tokens served from shared prefix blocks
+                          # (value = matched tokens), per warm admission
 
 
 @dataclass
@@ -196,7 +198,7 @@ class ServingEngine:
     def __init__(self, arch: str, config: Optional[EngineConfig] = None, *,
                  params=None, mesh=None,
                  store: Optional[ProgramStore] = None,
-                 fault_hook=None, **legacy):
+                 prefix_store=None, fault_hook=None, **legacy):
         if config is None:
             config = EngineConfig.from_legacy_kwargs(**legacy)
             if legacy:
@@ -245,6 +247,11 @@ class ServingEngine:
         self.paged = config.paged
         self.timeslice = config.paging.timeslice if config.paged else None
         self.pager = None
+        self.prefix_cfg = config.prefix
+        self.prefix_store = None
+        self._prefix_tier1 = False
+        self.prefix_suffix = (config.resolved_prefix_suffix
+                              if config.prefix is not None else 0)
         self.spec_k = config.spec_k
         self.spec_ngram = config.spec.ngram if config.spec is not None else 2
         self.horizon = config.horizon_length
@@ -270,21 +277,45 @@ class ServingEngine:
                          for name, spec in specs.items()}
         self._prefill = self.programs.get("prefill")
         self._prefill_slot = self.programs["prefill_slot"]
+        self._prefill_offset = self.programs.get("prefill_offset")
         self._decode = self.programs["decode"]
         self._verify = self.programs.get("verify")
         self._decode_horizon = self.programs.get("decode_horizon")
 
         if self.paged:
-            from repro.core.paging import PagedKVManager
+            from repro.core.paging import (PagedKVManager, PrefixStore,
+                                           leaf_kind)
             self.caches = transformer.init_paged_cache(
                 cfg, self.batch, self.max_len, kv_block=self.kv_block,
                 arena_blocks=self.arena_blocks)
+            if self.prefix_cfg is not None and prefix_store is None:
+                # engine-private store; a cluster supervisor passes ONE
+                # shared PrefixStore so prefixes survive replica failover
+                prefix_store = PrefixStore()
+            self.prefix_store = (prefix_store if self.prefix_cfg is not None
+                                 else None)
             self.pager = PagedKVManager(
                 self.arena_blocks,
                 transformer.paged_block_bytes(cfg, self.kv_block),
                 uva=self.syscore.uva,
+                kv_block=self.kv_block,
+                prefix_store=self.prefix_store,
                 on_fault=lambda blocks: self.syscore.hostcalls.dispatch(
                     CALL_METRIC, METRIC_PAGE_FAULT, float(blocks)))
+            if self.prefix_cfg is not None:
+                # the warm (skip-prefill) path requires byte-identical
+                # suffix recompute down the single-token decode path:
+                # recurrent-state families must replay the whole prompt to
+                # rebuild their state at the divergence point, and MoE
+                # routing reduces over different shapes in batched prefill
+                # vs one-token decode (top-k flips on low-bit drift).
+                # Both take the tier-2 path instead — full prefill over
+                # read-only shared blocks: storage deduplicated, compute
+                # identical, provably exact for every family
+                kinds = {leaf_kind(p) for p, _ in
+                         jax.tree_util.tree_flatten_with_path(self.caches)[0]}
+                self._prefix_tier1 = ("kv" in kinds and "state" not in kinds
+                                      and self.cfg.n_experts == 0)
         else:
             self.caches = transformer.init_cache(cfg, self.batch,
                                                  self.max_len,
@@ -301,6 +332,9 @@ class ServingEngine:
         self.accepted_drafts = 0       # drafts accepted (engine lifetime)
         self.preemptions = 0
         self.swap_ins = 0
+        self.prefix_admissions = 0     # admissions that mapped shared blocks
+        self.warm_admissions = 0       # of those, warm-path (skip-prefill)
+        self.prefix_tokens_reused = 0  # prompt tokens never re-prefilled
         self.slots: List[Optional[Request]] = [None] * self.batch
         self.queue: List[Request] = []
         self.completed: List[Request] = []
@@ -401,6 +435,25 @@ class ServingEngine:
             jnp.asarray(req.prompt_len, jnp.int32))
         self._place(slot, req, np.asarray(last))
 
+    def _admit_offset(self, slot: int, req: Request, offset: int):
+        """Warm admission (prefix hit): the slot's leading ``offset`` prompt
+        tokens are already resident in shared arena blocks mapped into its
+        block-table row, so only the suffix runs — one execution of the
+        hot-loaded ``prefill_offset`` program, positions seeded at the
+        divergence offset.  The matched tokens cost zero prefill compute;
+        that is the near-zero-TTFT path for warm-prefix traffic."""
+        self._pin_caches()
+        suffix = req.prompt[offset:]
+        assert 1 <= len(suffix) <= self.prefix_suffix, \
+            (req.rid, offset, req.prompt_len)
+        tokens = np.zeros((1, self.prefix_suffix), np.int32)
+        tokens[0, :len(suffix)] = suffix
+        self.caches, last = self._prefill_offset(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(offset, jnp.int32),
+            jnp.asarray(req.prompt_len, jnp.int32))
+        self._place(slot, req, np.asarray(last))
+
     def _admit_burst(self, reqs: List[Request]):
         """Cold-start burst: admit every request in ONE execution of the
         whole-batch ``prefill`` program (engine must be idle — the program
@@ -454,10 +507,14 @@ class ServingEngine:
                 break
             req = self.queue[0]
             n_blocks = self._blocks_needed(req.prompt_len, req.max_new)
-            if not self.pager.can_admit(req.rid, n_blocks):
+            shared = (self.pager.match_prefix(req.prompt)
+                      if self.prefix_cfg is not None and not req.needs_resume
+                      else [])
+            if not self.pager.can_admit(req.rid, n_blocks, shared=shared):
                 if self.timeslice is not None:
                     self._preempt_expired()
-                if not self.pager.can_admit(req.rid, n_blocks):
+                if not self.pager.can_admit(req.rid, n_blocks,
+                                            shared=shared):
                     break
             # remove by identity: _preempt_expired may have re-queued a
             # victim AHEAD of the peeked head (same arrival time, smaller
@@ -471,8 +528,31 @@ class ServingEngine:
                 self._resume_one(i, req)
             else:
                 self.caches = self.pager.admit(req.rid, n_blocks, i,
-                                               self.caches)
-                self._admit_one(i, req)
+                                               self.caches, shared=shared)
+                matched = len(shared) * self.kv_block
+                warm = (shared and self._prefix_tier1
+                        and len(shared) >= self.prefix_cfg.min_blocks
+                        and req.prompt_len - matched <= self.prefix_suffix)
+                if warm:
+                    self._admit_offset(i, req, matched)
+                else:
+                    self._admit_one(i, req)
+                if shared:
+                    self.prefix_admissions += 1
+                    self.warm_admissions += bool(warm)
+                    self.prefix_tokens_reused += matched
+                    self.syscore.hostcalls.dispatch(
+                        CALL_METRIC, METRIC_PREFIX_HIT, float(matched))
+                # publish only FULL-prefill blocks into the trie: the cold
+                # path's bytes are the canonical ones every consumer (warm
+                # or tier-2) must reproduce, so warm admissions bump refs
+                # but never contribute scan-computed bytes.  Skipped when
+                # the request already finished inside _admit_one (its
+                # blocks went back to the free list with it).
+                if self.prefix_cfg is not None and not warm \
+                        and req.rid in self.pager.pages:
+                    self.caches = self.pager.publish(req.rid, req.prompt,
+                                                     i, self.caches)
 
     def _resume_one(self, slot: int, req: Request):
         """Swap a preempted request back into a slot: the pager restores
@@ -522,12 +602,17 @@ class ServingEngine:
             req.t_done = time.perf_counter()
             self._proposers.pop(req.rid, None)
             self.completed.append(req)
+            if self.paged and req.rid in self.pager.pages:
+                # idle-slot swap-out's terminal case: the request is done,
+                # so its blocks free instead of swapping.  This must run
+                # even for a request finishing while PREEMPTED (slot == -1,
+                # page unpinned, possibly already written back to host):
+                # release() handles that case without touching any live
+                # block-table row, freeing resident blocks exactly once and
+                # dropping the host-tier kvpage: entries
+                self.caches = self.pager.release(req.rid, req.slot,
+                                                 self.caches)
             if req.slot >= 0:
-                if self.paged:
-                    # idle-slot swap-out's terminal case: the request is
-                    # done, so its blocks free instead of swapping
-                    self.caches = self.pager.release(req.rid, req.slot,
-                                                     self.caches)
                 self.slots[req.slot] = None
 
     def _step_metrics(self, dt: float, occupancy: float, extra=()):
@@ -816,6 +901,8 @@ class ServingEngine:
                              self.accepted_drafts)
         pf0 = self.pager.page_faults if self.paged else 0
         swo0 = self.pager.swap_outs if self.paged else 0
+        pa0, wa0 = self.prefix_admissions, self.warm_admissions
+        ptr0 = self.prefix_tokens_reused
         t0 = time.perf_counter()
         while self.steps - start_steps < max_steps and self.step():
             pass
@@ -874,6 +961,12 @@ class ServingEngine:
                 "swap_outs": self.pager.swap_outs - swo0,
                 "arena_occupancy": sum(arena) / max(len(arena), 1),
             })
+        if self.prefix_cfg is not None:
+            stats.update({
+                "prefix_admissions": self.prefix_admissions - pa0,
+                "warm_admissions": self.warm_admissions - wa0,
+                "prefix_tokens_reused": self.prefix_tokens_reused - ptr0,
+            })
         return stats
 
     def drain_completed(self) -> List[Request]:
@@ -908,8 +1001,8 @@ class ServingEngine:
         if ref is None:
             ref_config = self.config.replace(
                 batch=1, prefill_len=self.prefill_len, clock="step",
-                paging=None, spec=None, horizon=None, shard=ShardConfig(),
-                group_prefill=False, store_dir=None)
+                paging=None, prefix=None, spec=None, horizon=None,
+                shard=ShardConfig(), group_prefill=False, store_dir=None)
             params = self.params
             if self.mesh is not None:
                 # the oracle runs mesh-less single-device programs: gather
@@ -940,6 +1033,11 @@ def main():
     ap.add_argument("--arena-blocks", type=int, default=None,
                     help="device-resident KV blocks; below "
                          "batch*max_len/kv_block creates memory pressure")
+    ap.add_argument("--prefix", action="store_true",
+                    help="cross-request prefix sharing over the paged "
+                         "arena (requires --paged)")
+    ap.add_argument("--prefix-max-suffix", type=int, default=None,
+                    help="warm-path suffix capacity; None = 2*kv_block")
     ap.add_argument("--spec-k", type=int, default=None,
                     help="speculative decoding: drafts per verify step "
                          "(n-gram prompt lookup); None = plain decode")
@@ -957,6 +1055,8 @@ def main():
         paging=(PagingConfig(kv_block=args.kv_block,
                              arena_blocks=args.arena_blocks)
                 if args.paged else None),
+        prefix=(PrefixConfig(max_suffix=args.prefix_max_suffix)
+                if args.prefix else None),
         spec=(SpecConfig(k=args.spec_k, ngram=args.spec_ngram)
               if args.spec_k is not None else None),
         horizon=(HorizonConfig(length=args.horizon)

@@ -182,14 +182,19 @@ def gather_paged_kv(arena: jax.Array, block_table: jax.Array) -> jax.Array:
     """Block-table-indexed cache read (the paged-KV jump-table dereference).
 
     arena: (P, bs, H, D) physical blocks; block_table: (B, M) physical block
-    id per logical block, -1 = unmapped.  Returns the logical per-row cache
-    (B, M*bs, H, D): logical block j of row b is arena[block_table[b, j]].
-    Unmapped entries clamp to block 0 and read garbage — callers mask them
-    through the valid-length check of ``decode_attention``.
+    id per logical block, -1 = unmapped, ``-(p + 2)`` = physical block p
+    mapped READ-ONLY (a cross-request shared prefix block — the write path
+    keys its guard on ``phys >= 0``, so the encoding makes shared blocks
+    unwritable for free while this gather decodes them back).  Returns the
+    logical per-row cache (B, M*bs, H, D): logical block j of row b is
+    arena[decode(block_table[b, j])].  Unmapped entries clamp to block 0
+    and read garbage — callers mask them through the valid-length check of
+    ``decode_attention``.
     """
     b, m = block_table.shape
     bs = arena.shape[1]
-    gathered = arena[jnp.clip(block_table, 0)]
+    phys = jnp.where(block_table >= 0, block_table, -block_table - 2)
+    gathered = arena[jnp.clip(phys, 0)]
     return gathered.reshape(b, m * bs, *arena.shape[2:])
 
 
@@ -199,7 +204,10 @@ def write_paged_kv(arena: jax.Array, block_table: jax.Array, pos: jax.Array,
 
     Row b's value (B, H, D) lands in physical block
     ``block_table[b, pos[b] // bs]`` at offset ``pos[b] % bs``.  Rows whose
-    block is unmapped (released slots, table entry -1) are dropped, as are
+    block is unmapped (released slots, table entry -1) are dropped — and so
+    is any write aimed at a READ-ONLY shared-prefix mapping (encoded
+    ``-(p + 2)``, see :func:`gather_paged_kv`): the ``phys >= 0`` guard is
+    the write protection for cross-request shared blocks.  Also dropped are
     rows whose position lies beyond the table entirely (speculative
     overshoot past the reservation) — their physical destination is pushed
     out of range and ``mode='drop'`` elides the scatter, so an idle slot or

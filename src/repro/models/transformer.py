@@ -664,7 +664,9 @@ def verify_decode(cfg, params, caches, tokens, *, rules):
     new_caches = jax.tree_util.tree_map_with_path(fix, final, orig)
     if block_table is not None:
         # only mapped slots advance, mirroring the sequential paged decode
-        new_caches["pos"] = jnp.where(block_table[:, 0] >= 0, pos_new, pos0)
+        # (-1 = unmapped; a shared-prefix head block encodes as -(p+2) and
+        # is every bit as mapped)
+        new_caches["pos"] = jnp.where(block_table[:, 0] != -1, pos_new, pos0)
     else:
         new_caches["pos"] = pos_new
     return new_caches, ys, n_new
@@ -701,9 +703,11 @@ def decode_step(cfg, params, caches, token, pos=None, *, rules, live=None):
     if block_table is not None:
         # paged tree: the block table rides along unchanged, and only
         # mapped slots advance — an unmapped (released) slot's pos stays
-        # frozen so its block index can never creep out of range
+        # frozen so its block index can never creep out of range.  A row
+        # whose head block is a read-only shared mapping (-(p+2)) is
+        # mapped; only the -1 sentinel means unmapped.
         new_caches["block_table"] = block_table
-        mapped = block_table[:, 0] >= 0
+        mapped = block_table[:, 0] != -1
         advance = mapped if advance is None else advance & mapped
     new_caches["pos"] = (pos + 1 if advance is None
                          else jnp.where(advance, pos + 1, pos))

@@ -224,7 +224,12 @@ def make_paged_prefill_slot_step(cfg, rules, cache_len: int, kv_block: int):
     attention rows are scattered — block by block — into the arena blocks
     the host-side pager mapped for this slot, while recurrent state rows
     scatter into the slot as before.  Unmapped table entries (-1, beyond
-    the request's reservation) are dropped.
+    the request's reservation) are dropped, and so are read-only
+    shared-prefix mappings (encoded ``-(p + 2)``): a full prefill over a
+    prompt whose head blocks are shared recomputes those positions but
+    never writes through the shared copy — bit-identical bytes land on the
+    floor, which is what makes tier-2 prefix admission exact for every
+    family including recurrent-state ones.
     """
     assert not cfg.is_encdec, "decoder-only serving path"
     n_blocks = cache_len // kv_block
@@ -269,6 +274,54 @@ def make_paged_prefill_slot_step(cfg, rules, cache_len: int, kv_block: int):
         return new_caches, last
 
     return prefill_slot
+
+
+def make_paged_prefill_offset_step(cfg, rules, max_suffix: int):
+    """Warm-prefix admission program (cross-request prefix sharing).
+
+    Contract of :func:`make_paged_prefill_slot_step` —
+    ``(params, caches, tokens, slot, offset, length) -> (caches, last)`` —
+    except the slot's leading ``offset`` prompt tokens are already resident
+    in shared arena blocks mapped read-only into its block-table row, so
+    NO compute runs for them: only the suffix ``tokens[0, :length-offset]``
+    is processed, as a ``lax.scan`` of the same per-token ``decode_step``
+    the decode path dispatches, live-masked to this slot so no other row
+    moves.  Suffix positions start at the divergence ``offset`` (the pager
+    guarantees it is block-aligned and strictly below ``length``, so at
+    least one token — the one producing the first-token logits — always
+    runs, and every suffix write lands in the slot's private blocks; the
+    ``-(p+2)`` write guard drops anything aimed at a shared block).
+    Reusing ``decode_step`` rather than a batched suffix prefill is what
+    keeps warm streams byte-exact: wherever the engine's sequential decode
+    is bit-exact (the property the verify and horizon paths already gate
+    on), this scan produces the identical KV bytes and logits.
+    ``last`` is the (V,) logits at the final prompt position.
+    """
+    assert not cfg.is_encdec, "decoder-only serving path"
+    assert max_suffix >= 1
+
+    def prefill_offset(params, caches, tokens, slot, offset, length):
+        b = caches["pos"].shape[0]
+        lane = jnp.arange(b) == slot
+        n_suffix = length - offset
+        caches = dict(caches)
+        caches["pos"] = jnp.where(lane, offset, caches["pos"])
+
+        def body(c, xt):
+            t, tok = xt
+            live = lane & (t < n_suffix)
+            tok_b = jnp.where(lane, tok, 0).astype(jnp.int32)[:, None]
+            logits, c2 = transformer.decode_step(cfg, params, c, tok_b,
+                                                 rules=rules, live=live)
+            return c2, jnp.take(logits[:, 0], slot, axis=0)
+
+        xs = (jnp.arange(max_suffix), tokens[0])
+        new_caches, ys = jax.lax.scan(body, caches, xs)
+        last = jnp.take(ys, jnp.clip(n_suffix - 1, 0, max_suffix - 1),
+                        axis=0)
+        return new_caches, last
+
+    return prefill_offset
 
 
 def make_serve_step(cfg, rules):
@@ -470,6 +523,18 @@ def serve_program_specs(cfg, rules, config=None, *,
             out_logical=(c_abstract,
                          LogicalArray((batch, V), jnp.float32,
                                       ("batch", "vocab"))))
+    if paged and config.prefix is not None:
+        ms = config.resolved_prefix_suffix
+        tok_suffix = LogicalArray((1, ms), jnp.int32, ("batch", "seq"))
+        specs["prefill_offset"] = ProgramSpec(
+            key="prefill_offset",
+            fn=make_paged_prefill_offset_step(cfg, rules, ms),
+            abstract_args=(p_abstract, c_abstract, tok_suffix, scalar,
+                           scalar, scalar),
+            donate_argnums=(1,),
+            context=context + "|" + config.prefix_context(),
+            out_logical=(c_abstract,
+                         LogicalArray((V,), jnp.float32, ("vocab",))))
     if spec_k is not None:
         tok_verify = LogicalArray((batch, spec_k + 1), jnp.int32,
                                   ("batch", None))

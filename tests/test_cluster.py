@@ -11,7 +11,8 @@ import pytest
 
 from repro.cluster import ClusterError, RequestJournal, Router, Supervisor
 from repro.core import ProgramStore
-from repro.engine_config import ClusterConfig, EngineConfig, ROUTER_POLICIES
+from repro.engine_config import (ClusterConfig, EngineConfig, PagingConfig,
+                                 PrefixConfig, ROUTER_POLICIES)
 from repro.launch.serve import ServingEngine
 from repro.runtime.fault import FaultInjector, SimulatedFailure
 
@@ -75,11 +76,49 @@ def test_router_prefix_affinity_is_sticky_and_deterministic():
 
 
 def test_router_rank_empty_when_no_live_replicas():
-    assert Router("least_loaded").rank(np.arange(3), {}) == []
+    """ISSUE 8 satellite: EVERY policy returns [] on an empty snapshot map
+    (regression: prefix_affinity used to take its hash modulo zero live
+    replicas)."""
     for policy in ROUTER_POLICIES:
-        Router(policy)                              # every policy constructs
+        assert Router(policy).rank(np.arange(3), {}) == [], policy
     with pytest.raises(AssertionError):
         Router("beam_me_up")
+
+
+def test_router_affinity_short_and_empty_prompts_bucket_totally():
+    """ISSUE 8 satellite: prompts shorter than ``affinity_len`` hash over
+    a fixed-width padded prefix (regression: raw variable-length bytes
+    made short prompts alias across lengths and never share a bucket with
+    themselves deterministically)."""
+    r = Router("prefix_affinity", affinity_len=8)
+    snaps = {i: _snap() for i in range(3)}
+    short = np.asarray([7, 9], np.int32)
+    assert r.rank(short, snaps)[0] == r.rank(short.copy(), snaps)[0]
+    assert sorted(r.rank([], snaps)) == [0, 1, 2]      # empty prompt: total
+    assert sorted(r.rank([5], snaps)) == [0, 1, 2]
+    # a short prompt and a longer one sharing its head are DIFFERENT keys
+    # (-1 never appears as a token id, so the pad is unambiguous)
+    long_ = np.asarray([7, 9, 1, 2, 3, 4, 5, 6], np.int32)
+    assert r._affinity_key(short) != r._affinity_key(long_)
+    # deterministic across router instances (crc32, not salted hash())
+    assert Router("prefix_affinity", affinity_len=8)._affinity_key(short) \
+        == r._affinity_key(short)
+    with pytest.raises(AssertionError):
+        Router("prefix_affinity", affinity_len=0)
+
+
+def test_router_record_steers_and_survives_replica_death():
+    """Placement feedback: record() makes later same-prefix prompts rank
+    the publishing replica first even when it is the busiest — and a dead
+    sticky replica degrades to the hash bucket over the survivors."""
+    r = Router("prefix_affinity", affinity_len=4)
+    p = np.asarray([3, 1, 4, 1, 5], np.int32)
+    snaps = {0: _snap(), 1: _snap(active=2, queue=4), 2: _snap()}
+    r.record(p, 1)                      # replica 1 holds this prefix
+    assert r.rank(p, snaps)[0] == 1     # sticky beats load
+    alive = {0: _snap(), 2: _snap()}    # the sticky replica died
+    order = r.rank(p, alive)
+    assert order[0] in (0, 2) and sorted(order) == [0, 2]
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +380,61 @@ def test_cluster_run_reports_truncation_and_windowed_stats(tmp_path):
     assert idle["requests"] == 0 and idle["completed_all"]
     assert all(p["decode_tokens"] == 0 and p["decode_tok_per_s"] == 0.0
                for p in idle["per_replica"])
+    sup.close()
+
+
+def test_cluster_failover_rebuilds_prefix_trie_and_stays_exact(tmp_path):
+    """ISSUE 8 satellite: prefix sharing composes with warm failover.  A
+    prefix-affinity cluster is killed mid-run on the replica serving a
+    popular prefix; the rebooted replica re-seeds its trie from the ONE
+    fleet-wide PrefixStore, replayed requests hit the host-tier shared
+    blocks again, and the merged streams stay token-exact vs a single
+    prefix-sharing engine."""
+    ecfg = _engine_cfg(paging=PagingConfig(kv_block=4),
+                       prefix=PrefixConfig())
+    ccfg = ClusterConfig(engine=ecfg, replicas=2, router="prefix_affinity",
+                         store_dir=str(tmp_path / "store"),
+                         journal_dir=str(tmp_path / "journals"))
+    rng = np.random.default_rng(11)
+    base = rng.integers(1, 500, size=12).astype(np.int32)
+    alt = rng.integers(1, 500, size=12).astype(np.int32)
+    prompts = [base, base.copy(), np.concatenate([base[:8], alt[:4]]),
+               base.copy(), np.concatenate([base[:4], alt[:8]]),
+               base.copy()]
+    # kill the replica the popular prefix routes to, so the trie it built
+    # is exactly what the reboot must recover from the store
+    victim = Router("prefix_affinity", ccfg.affinity_len).rank(
+        base, {0: _snap(), 1: _snap()})[0]
+    inj = FaultInjector(fail_at_steps=[6])
+    sup = Supervisor(ARCH, ccfg, fault_hooks={victim: inj.check})
+    rids = [sup.submit(p, max_new=5) for p in prompts]
+    assert all(r is not None for r in rids)
+    stats = sup.run()
+    assert inj.fired == [6]
+    assert stats["kills"] == 1 and len(stats["recoveries"]) == 1
+    rec = stats["recoveries"][0]
+    assert rec["replica"] == victim and rec["replayed"] >= 1
+    assert stats["requests"] == len(prompts)
+    assert sorted(sup.streams) == sorted(rids)
+    # ONE fleet store, and the reboot re-seeded its trie from it
+    assert sup.prefix_store is not None and len(sup.prefix_store) > 0
+    reborn = sup.replicas[victim].engine
+    assert reborn.prefix_store is sup.prefix_store
+    rep = reborn.pager.report()["prefix"]
+    assert rep["trie_blocks"] == len(sup.prefix_store)
+    # the replayed popular prefix hit shared blocks on the fresh engine —
+    # faulted back from the host tier, never re-prefilled from scratch
+    assert reborn.pager.prefix_hits >= 1
+    assert reborn.pager.shared_faults >= 1
+    assert sup.report()["prefix_store"]["entries"] == len(sup.prefix_store)
+    # token-exact merged streams vs a single prefix-sharing engine
+    single = ServingEngine(ARCH, ecfg, params=sup.params,
+                           store=ProgramStore(tmp_path / "store"))
+    srefs = [single.submit(p, max_new=5) for p in prompts]
+    single.run()
+    for ref, rid in zip(srefs, rids):
+        assert sup.streams[rid] == ref.generated, \
+            (rid, sup.streams[rid], ref.generated)
     sup.close()
 
 

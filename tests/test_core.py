@@ -263,13 +263,15 @@ def _dc_lru_property(cap_pages, ops):
       * every LRU eviction picks the least-recently-used evictable page
         (checked against the mirror's recency list via on_evict);
       * reset() invalidates exactly the non-pinned resident pages, firing
-        the writeback hook for each (lossless for stateful arenas).
+        the writeback hook for each (lossless for stateful arenas);
+      * pins COUNT (shared-entry semantics): a page pinned twice must
+        survive one unpin.
 
     ``ops``: (op, page) pairs with op 0=call, 1=pin, 2=unpin, 3=reset.
     """
     size = 10
     recency = []                       # resident pages, LRU first (mirror)
-    pinned = set()
+    pinned = {}                        # name -> pin refcount (mirror)
     in_reset = [False]
     evicted_log = []
 
@@ -294,13 +296,20 @@ def _dc_lru_property(cap_pages, ops):
             recency.append(name)
         elif op == 1:
             # never pin the whole arena (a full-of-pinned arena is the
-            # documented MemoryError, tested separately)
-            if len(pinned) < cap_pages - 1:
+            # documented MemoryError, tested separately); re-pinning an
+            # already-pinned page only deepens its refcount
+            if name in pinned:
                 t.pin(name)
-                pinned.add(name)
+                pinned[name] += 1
+            elif len(pinned) < cap_pages - 1:
+                t.pin(name)
+                pinned[name] = 1
         elif op == 2:
-            t.unpin(name)
-            pinned.discard(name)
+            if pinned.get(name):
+                t.unpin(name)
+                pinned[name] -= 1
+                if pinned[name] == 0:
+                    del pinned[name]
         else:
             in_reset[0] = True
             t.reset()                  # writes back every non-pinned page

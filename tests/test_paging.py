@@ -94,6 +94,42 @@ def test_pager_swap_roundtrip_preserves_blocks_and_state():
     assert mgr.table.resident_bytes <= mgr.table.capacity
 
 
+def test_release_while_preempted_no_double_free_no_host_leak():
+    """ISSUE 8 satellite: a request that finishes while PREEMPTED
+    (slot == -1) — possibly already evicted to the host tier — must free
+    its blocks exactly once, drop its ``kvpage:`` host entries, and touch
+    no block-table row (the old code cleared row ``-1``, silently wiping
+    the LAST slot's live mapping)."""
+    from repro.core.uva import UVARegistry
+    uva = UVARegistry()
+    mgr = PagedKVManager(4, 128, uva=uva)
+    caches = _toy_caches()
+
+    # still-resident (lazily swapped) preempted release: freed exactly once
+    caches = mgr.admit(rid=0, n_blocks=1, slot=0, caches=caches)
+    caches = mgr.preempt(0, 0, caches)
+    caches = mgr.release(0, -1, caches)
+    assert sorted(mgr.free) == list(range(4))
+    mgr.check_invariants()
+
+    # evicted preempted release: nothing resident to double-free, the
+    # kvpage: host entries drop, and no block-table row changes
+    caches = mgr.admit(rid=1, n_blocks=2, slot=0, caches=caches)
+    caches = mgr.preempt(1, 0, caches)
+    caches = mgr.admit(rid=2, n_blocks=3, slot=1, caches=caches)  # evicts 1
+    assert mgr.swap_outs == 1
+    assert "kvpage:1/0" in uva
+    before = np.asarray(caches["block_table"]).copy()
+    caches = mgr.release(1, -1, caches)
+    np.testing.assert_array_equal(np.asarray(caches["block_table"]), before)
+    assert "kvpage:1/0" not in uva
+    assert len(mgr.free) == 1
+    mgr.check_invariants()
+    caches = mgr.release(2, 1, caches)
+    assert sorted(mgr.free) == list(range(4))
+    mgr.check_invariants()
+
+
 # ---------------------------------------------------------------------------
 # paged serving engine
 # ---------------------------------------------------------------------------
