@@ -98,6 +98,13 @@ class RequestJournal:
     def finished(self) -> Dict[int, List[int]]:
         return dict(self._done)
 
+    def record(self, rid: int) -> Optional[dict]:
+        """The submit record for ``rid`` (a copy), or ``None`` if this
+        replica never journaled it.  Rebalancing reads the record before
+        marking the rid moved to the destination replica's journal."""
+        rec = self._submits.get(int(rid))
+        return dict(rec) if rec is not None else None
+
     def __len__(self) -> int:
         return len(self._submits)
 

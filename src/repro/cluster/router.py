@@ -29,8 +29,9 @@ instead of fighting it.
 """
 from __future__ import annotations
 
+import bisect
 import zlib
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -52,7 +53,11 @@ class Router:
         assert affinity_len >= 1, affinity_len
         self.policy = policy
         self.affinity_len = affinity_len
-        self._rr = 0                 # round-robin cursor
+        # round-robin position: the replica INDEX routed last, not a
+        # monotonically increasing counter — a counter modulo fleet size
+        # re-aliases whenever the fleet grows or shrinks (every elastic
+        # scale event would skew the rotation)
+        self._rr_last: Optional[int] = None
         self._sticky: Dict[int, int] = {}   # affinity key -> replica whose
                                             # trie holds the prefix
         self.routed = 0
@@ -97,6 +102,15 @@ class Router:
         while len(self._sticky) > STICKY_CAP:
             self._sticky.pop(next(iter(self._sticky)))
 
+    def evict(self, replica: int):
+        """Drop every sticky entry pointing at ``replica`` — called when a
+        replica retires or fails permanently, so stale affinity entries
+        are reclaimed immediately instead of leaking until STICKY_CAP
+        pressure pushes them out."""
+        replica = int(replica)
+        for k in [k for k, v in self._sticky.items() if v == replica]:
+            del self._sticky[k]
+
     # -- ranking -------------------------------------------------------------
     def rank(self, prompt, snapshots: Dict[int, Dict[str, object]]
              ) -> List[int]:
@@ -114,9 +128,16 @@ class Router:
                          key=lambda i: (self.load(snapshots[i]), i))
         if self.policy == "round_robin":
             idx = sorted(snapshots)
-            start = self._rr % len(idx)
-            self._rr += 1
+            # next replica strictly after the last one routed, wrapping —
+            # stable under membership change: retiring replica 0 of
+            # {0,1,2} after serving it leaves the rotation at 1, and a
+            # later grow to {0..3} resumes from the same point
+            if self._rr_last is None:
+                start = 0
+            else:
+                start = bisect.bisect_right(idx, self._rr_last) % len(idx)
             order = idx[start:] + idx[:start]
+            self._rr_last = order[0]
         elif self.policy == "prefix_affinity":
             idx = sorted(snapshots)
             key = self._affinity_key(prompt)

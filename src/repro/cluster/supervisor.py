@@ -11,9 +11,12 @@ runtime coordinates many Epiphany cores over fast shared state:
     single supervisor loop multiplexes the fleet without threads and the
     whole schedule stays deterministic on the step clock;
   * health checks every ``health_interval`` ticks feed the replica's new
-    step-latency telemetry (the engine's existing METRIC_DECODE_MS
-    hostcall channel) into a per-replica
-    :class:`~repro.runtime.fault.StragglerMonitor`;
+    step-latency telemetry (supervised tick wall time, which observes
+    everything a slow replica does — the decode program, paging, a
+    misbehaving fault hook) into a per-replica
+    :class:`~repro.runtime.fault.StragglerMonitor`; pending samples are
+    flushed on crash and at the end of every :meth:`run`, so the slow
+    steps preceding a failure are never stranded between boundaries;
   * a crash (``SimulatedFailure`` escaping a tick — the injectable
     ``fault_hook``) discards the engine; the replica reboots under a
     :class:`~repro.runtime.fault.RestartPolicy` (restart-with-backoff,
@@ -24,15 +27,35 @@ runtime coordinates many Epiphany cores over fast shared state:
   * past the restart budget the replica is failed permanently and its
     unfinished requests re-route through the router to survivors.
 
+Elasticity (``ClusterConfig.scale`` — a :class:`ScaleConfig`): the fleet
+is a resizable pool over the shared store.  Every supervisor pass scores
+mean fleet load (the router's own load metric); sustained load above the
+high watermark spawns a NEW replica — booted warm from the shared
+ProgramStore/PrefixStore mid-run, optionally on a background thread so
+serving never stalls behind the boot — and rebalances queued requests
+onto it through the journal ``moved`` path.  Sustained load below the
+low watermark quiesces an idle replica: ``begin_drain`` stops admissions,
+the in-flight batch finishes, then the replica retires and its
+journal/telemetry fold into the fleet accumulators.  A sustained
+straggler escalation triggers proactive REPLACEMENT (capacity-neutral,
+allowed even at ``max_replicas``): a fresh warm replica boots, the
+victim retires, and its unfinished requests re-route via the journal.
+Each decision is recorded as a validated
+:class:`~repro.runtime.elastic.ElasticPlan` over a ``replica`` axis
+(the model axis is fixed — TP degree is per-engine) in
+``Supervisor.scale_events``.
+
 Exactness: replicas share one params tree and greedy decoding is
 deterministic, so the merged per-request streams of an N-replica cluster
-— under any kill/reboot/replay schedule — are byte-identical to a single
-engine serving the same requests (gated in ``tests/test_cluster.py``).
-A kill loses no request: everything un-finished is journaled and replayed
-from the prompt.
+— under any kill/reboot/replay/scale schedule — are byte-identical to a
+single engine serving the same requests (gated in ``tests/test_cluster.py``
+and ``tests/test_elastic_cluster.py``).  A kill, a shrink or a
+replacement loses no request: everything un-finished is journaled and
+replayed from the prompt.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -45,6 +68,7 @@ from repro.core import ProgramStore
 from repro.engine_config import ClusterConfig
 from repro.launch.serve import (METRIC_DECODE_MS, METRIC_TTFT_MS,
                                 ServingEngine)
+from repro.runtime.elastic import ElasticPlan
 from repro.runtime.fault import (RestartPolicy, SimulatedFailure,
                                  StragglerMonitor)
 
@@ -62,12 +86,17 @@ class Replica:
     The engine is disposable (a crash discards it whole); everything that
     must survive a crash — the journal, the straggler monitor, restart
     accounting, accumulated telemetry — lives here on the host side.
+
+    Lifecycle: ``running`` -> ``dead`` (crashed, reboot owed) ->
+    ``running`` | ``failed`` (restart budget exhausted); elastically
+    ``running`` -> ``draining`` (quiescing: no routing, batch finishing)
+    -> ``retired`` (engine discarded, telemetry folded into the fleet).
     """
     idx: int
     engine: Optional[ServingEngine] = None
     journal: RequestJournal = field(default_factory=RequestJournal)
     monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
-    state: str = "running"            # "running" | "dead" | "failed"
+    state: str = "running"   # "running"|"draining"|"dead"|"failed"|"retired"
     ticks: int = 0                    # supervised ticks, engine lifetime
     served: int = 0                   # completions collected from this slot
     restarts: int = 0                 # crash count == restart attempts used
@@ -78,6 +107,10 @@ class Replica:
     # bounded admission queue holds at once, so replay drains under
     # back-pressure across supervisor passes instead of in one burst
     replay_pending: List[Dict[str, Any]] = field(default_factory=list)
+    # elastic-scale bookkeeping
+    idle_passes: int = 0              # consecutive no-work supervisor passes
+    retire_reason: Optional[str] = None
+    _esc_handled: int = 0             # escalations already acted on
     # telemetry accumulators (survive engine swaps; offsets reset per boot)
     acc_decode_tokens: int = 0
     acc_decode_ms: float = 0.0
@@ -103,12 +136,14 @@ class Supervisor:
         (``config.engine.seed``) which every other replica — and every
         failover reboot — then shares, so all streams are greedy-exact.
     store: an open :class:`ProgramStore` overriding ``config.store_dir``.
-        Replica 0's cold boot compiles and stores; replicas 1..N-1 and all
-        reboots install by deserialization (``compile_s == 0``).
+        Replica 0's cold boot compiles and stores; replicas 1..N-1, all
+        reboots and every elastically spawned replica install by
+        deserialization (``compile_s == 0``).
     fault_hooks: replica index -> hook injected as the engine's
         ``fault_hook`` (e.g. a ``FaultInjector.check`` bound method).  The
         SAME hook is re-attached across reboots, so a once-per-step
-        injector kills once, not every reboot.
+        injector kills once, not every reboot.  A replacement replica has
+        a fresh index and therefore no inherited hook.
     """
 
     def __init__(self, arch: str, config: Optional[ClusterConfig] = None, *,
@@ -140,13 +175,19 @@ class Supervisor:
         self.kills = 0
         self.rerouted = 0
         self.rejected = 0
+        self.retired = 0
+        self.rebalanced = 0                        # requests moved onto a
+                                                   # freshly spawned replica
+        self.scale_events: List[Dict[str, Any]] = []
         self._next_rid = 0
+        self._pass = 0                 # supervisor passes (scale clock)
+        self._last_scale = -(10 ** 9)  # pass of the last scale action
+        self._high_run = 0             # consecutive passes above high mark
+        self._low_run = 0              # consecutive passes below low mark
+        self._spawn: Optional[Dict[str, Any]] = None  # in-flight boot
         self.replicas: List[Replica] = []
         for i in range(self.config.replicas):
-            journal = RequestJournal(
-                None if self.config.journal_dir is None else
-                f"{self.config.journal_dir}/replica{i}.jsonl")
-            rep = Replica(idx=i, journal=journal)
+            rep = self._make_replica(i)
             rep.engine = self._boot_engine(i)
             self.replicas.append(rep)
             if self.params is None:
@@ -155,6 +196,15 @@ class Supervisor:
                 self.params = rep.engine.params
 
     # -- replica lifecycle ----------------------------------------------------
+    def _make_replica(self, idx: int) -> Replica:
+        journal = RequestJournal(
+            None if self.config.journal_dir is None else
+            f"{self.config.journal_dir}/replica{idx}.jsonl")
+        monitor = StragglerMonitor(
+            threshold=self.config.straggler_threshold,
+            patience=self.config.straggler_patience)
+        return Replica(idx=idx, journal=journal, monitor=monitor)
+
     def _boot_engine(self, idx: int) -> ServingEngine:
         return ServingEngine(self.arch, self.config.engine,
                              params=self.params, store=self.store,
@@ -164,6 +214,10 @@ class Supervisor:
     def _on_crash(self, rep: Replica, err: Exception):
         """A tick raised: the engine is gone, with every in-flight request
         — which is exactly what the journal still holds."""
+        # flush step telemetry accumulated since the last health boundary
+        # FIRST: the slow steps preceding a crash are exactly the samples
+        # straggler replacement needs, and the engine swap would strand them
+        self._health_check(rep)
         self.kills += 1
         rep.engine = None
         rep.restarts += 1
@@ -204,6 +258,9 @@ class Supervisor:
             "replayed": 0,
         })
         rep.state = "running"
+        # fresh engine, fresh baseline: its step times must not be judged
+        # against the dead engine's median (escalations stay cumulative)
+        rep.monitor.reset_window()
         rep.replay_pending = rep.journal.unfinished()
         self._drain_replay(rep)
         return True
@@ -238,7 +295,8 @@ class Supervisor:
         return replayed
 
     def _reroute(self, rep: Replica) -> int:
-        """Hand a failed replica's unfinished requests to survivors."""
+        """Hand a failed (or retired-with-leftovers) replica's unfinished
+        requests to the running fleet."""
         moved = 0
         for r in rep.journal.unfinished():
             target = self._route_submit(
@@ -249,6 +307,227 @@ class Supervisor:
             rep.journal.mark_moved(r["rid"])
             moved += 1
         self.rerouted += moved
+        return moved
+
+    # -- elastic scaling ------------------------------------------------------
+    def _scale_plan(self, n_old: int, n_new: int) -> ElasticPlan:
+        """The scale decision as a validated re-mesh plan: the fleet is a
+        ``replica`` axis over engines whose own ``model`` axis (TP degree)
+        is fixed — exactly the invariant ``ElasticPlan.validate`` checks."""
+        tp = self.config.engine.shard.n_devices
+        plan = ElasticPlan(old_axes={"replica": n_old, "model": tp},
+                           new_axes={"replica": n_new, "model": tp})
+        plan.validate()
+        return plan
+
+    def _fleet_load(self, running: List[Replica]) -> float:
+        """Mean router load over the running fleet — the same score
+        ``Router.load`` ranks admissions by, so the watermarks and the
+        router agree on what 'loaded' means."""
+        if not running:
+            return 0.0
+        return (sum(Router.load(r.engine.snapshot()) for r in running)
+                / len(running))
+
+    def _scale_pass(self):
+        """One elastic-policy evaluation, run every supervisor pass."""
+        cfg = self.config.scale
+        self._pass += 1
+        if self._spawn is not None:
+            self._poll_spawn()
+        # retire any draining replica whose batch has fully drained
+        for rep in self.replicas:
+            if (rep.state == "draining" and not rep.engine.has_work
+                    and not rep.replay_pending):
+                self._retire(rep, rep.retire_reason or "shrink")
+        running = [r for r in self.replicas if r.state == "running"]
+        load = self._fleet_load(running)
+        self._high_run = self._high_run + 1 if load >= cfg.high_watermark \
+            else 0
+        self._low_run = self._low_run + 1 if load <= cfg.low_watermark else 0
+        for rep in running:
+            if rep.engine.has_work or rep.replay_pending:
+                rep.idle_passes = 0
+            else:
+                rep.idle_passes += 1
+        if self._spawn is not None:
+            return                    # one boot in flight at a time
+        # straggler replacement first: capacity-neutral, so neither the
+        # max_replicas cap nor the load watermarks gate it
+        for rep in running:
+            if rep.monitor.escalations > rep._esc_handled:
+                rep._esc_handled = rep.monitor.escalations
+                self._begin_spawn("replace", victim=rep.idx,
+                                  reason=f"straggler escalation "
+                                         f"#{rep.monitor.escalations}")
+                return
+        cooled = self._pass - self._last_scale >= cfg.cooldown
+        if (cooled and self._high_run >= cfg.sustain_window
+                and len(running) < cfg.max_replicas):
+            self._begin_spawn(
+                "grow", reason=f"load {load:.2f} >= "
+                               f"{cfg.high_watermark} x{self._high_run}")
+            return
+        if (cooled and self._low_run >= cfg.sustain_window
+                and len(running) > cfg.min_replicas):
+            idle = [r for r in running
+                    if r.idle_passes >= cfg.sustain_window]
+            if idle:
+                victim = max(idle, key=lambda r: r.idx)
+                victim.state = "draining"
+                victim.retire_reason = "idle"
+                victim.engine.begin_drain()
+                self._last_scale = self._pass
+                self._low_run = 0
+                self.scale_events.append({
+                    "action": "shrink", "replica": victim.idx,
+                    "victim": victim.idx, "pass": self._pass,
+                    "reason": f"load {load:.2f} <= {cfg.low_watermark}, "
+                              f"idle x{victim.idle_passes}",
+                    "plan": self._plan_dict(len(running), len(running) - 1),
+                })
+
+    def _plan_dict(self, n_old: int, n_new: int) -> Dict[str, Any]:
+        plan = self._scale_plan(n_old, n_new)
+        return {"old_axes": dict(plan.old_axes),
+                "new_axes": dict(plan.new_axes),
+                "scale_factor": plan.scale_factor}
+
+    def _begin_spawn(self, action: str, victim: Optional[int] = None,
+                     reason: str = ""):
+        """Start booting a new replica (grow or replace).  With
+        ``async_spawn`` the ~100 ms warm boot runs on a background thread
+        and the supervisor keeps ticking the fleet; the engine attaches on
+        a later pass via :meth:`_poll_spawn`.  Synchronous spawn boots and
+        attaches inline — deterministic, for tests."""
+        idx = len(self.replicas)
+        n_run = sum(1 for r in self.replicas if r.state == "running")
+        n_new = n_run + 1 if action == "grow" else n_run
+        event: Dict[str, Any] = {
+            "action": action, "replica": idx, "victim": victim,
+            "reason": reason, "pass": self._pass,
+            "plan": self._plan_dict(n_run, n_new),
+        }
+        self._last_scale = self._pass
+        self._high_run = 0
+        box: Dict[str, Any] = {}
+
+        def _boot():
+            try:
+                t0 = time.perf_counter()
+                box["engine"] = self._boot_engine(idx)
+                box["boot_s"] = time.perf_counter() - t0
+            except BaseException as e:        # surfaced by _poll_spawn
+                box["error"] = e
+
+        if self.config.scale.async_spawn:
+            th = threading.Thread(target=_boot, daemon=True,
+                                  name=f"replica{idx}-boot")
+            th.start()
+            self._spawn = {"event": event, "box": box, "thread": th,
+                           "action": action, "victim": victim, "idx": idx}
+        else:
+            _boot()
+            self._spawn = {"event": event, "box": box, "thread": None,
+                           "action": action, "victim": victim, "idx": idx}
+            self._poll_spawn()
+
+    def _poll_spawn(self) -> bool:
+        """Attach a finished boot to the fleet; False while still booting."""
+        sp = self._spawn
+        if sp["thread"] is not None and sp["thread"].is_alive():
+            return False
+        self._spawn = None
+        box = sp["box"]
+        if "error" in box:
+            raise box["error"]
+        engine, idx = box["engine"], sp["idx"]
+        rep = self._make_replica(idx)
+        rep.engine = engine
+        progs = engine.syscore.report()["programs"]
+        event = sp["event"]
+        event.update({
+            "boot_s": box["boot_s"],
+            "warm": (self.store is not None and len(progs) > 0 and
+                     all(p["source"] == "store" for p in progs.values())),
+            "compile_s": sum(p["compile_s"] for p in progs.values()),
+            "load_s": sum(p["load_s"] for p in progs.values()),
+        })
+        self.replicas.append(rep)
+        self.scale_events.append(event)
+        self._last_scale = self._pass     # cooldown counts from attach
+        if sp["action"] == "replace" and sp["victim"] is not None:
+            victim = self.replicas[sp["victim"]]
+            self._retire(victim, "straggler-replaced")
+            if victim.journal.unfinished():
+                # re-route into the fleet (the replacement included); any
+                # back-pressured leftovers retry every main-loop pass
+                self._reroute(victim)
+        else:
+            self._rebalance_into(rep)
+        return True
+
+    def _retire(self, rep: Replica, reason: str):
+        """Fold a replica out of the fleet: collect its final completions
+        and telemetry, discard the engine, drop its sticky routes.  The
+        journal stays — retired-with-unfinished (a replaced straggler)
+        re-routes through the main loop exactly like ``failed``."""
+        if rep.engine is not None:
+            self._pump(rep)
+        self._health_check(rep)           # flush stranded step telemetry
+        rep.engine = None
+        rep.state = "retired"
+        rep.retire_reason = reason
+        rep.replay_pending.clear()
+        self.router.evict(rep.idx)
+        self.retired += 1
+
+    def _rebalance_into(self, new_rep: Replica) -> int:
+        """Move queued (never-started) requests from the deepest-queued
+        running replica onto a freshly attached one, so growth helps the
+        backlog that triggered it instead of only future arrivals.
+
+        Only QUEUED, non-preempted requests move — they hold no engine
+        state, so resubmitting the journaled prompt elsewhere is exact.
+        The move is journaled as ``moved`` on the donor and ``submit`` on
+        the receiver (the same ledger path failover uses), and the new
+        request keeps the donor-side wall-clock submit time so TTFT stays
+        honest."""
+        donors = [r for r in self.replicas
+                  if r.state == "running" and r is not new_rep]
+        if not donors:
+            return 0
+        donor = max(donors, key=lambda r: len(r.engine.queue))
+        take = len(donor.engine.queue) // 2
+        moved = 0
+        # take from the queue TAIL (latest arrivals): the head is next to
+        # admit on the donor and moving it would only add boot latency
+        for r in list(reversed(donor.engine.queue))[:take]:
+            if r.needs_resume:
+                continue              # preempted: its KV lives in the pager
+            rec = donor.journal.record(r.rid)
+            if rec is None:
+                continue
+            got = donor.engine.withdraw(r.rid)
+            if got is None:
+                continue
+            req = new_rep.engine.submit(
+                np.asarray(rec["prompt"], np.int32), rec["max_new"],
+                arrival_time=0.0, rid=rec["rid"])
+            if req is None:           # receiver full: put the tail back
+                back = donor.engine.submit(
+                    np.asarray(rec["prompt"], np.int32), rec["max_new"],
+                    arrival_time=got.arrival_time, rid=rec["rid"])
+                if back is not None:
+                    back.t_submit = got.t_submit
+                break
+            req.t_submit = got.t_submit
+            donor.journal.mark_moved(r.rid)
+            new_rep.journal.append_submit(rec["rid"], rec["prompt"],
+                                          rec["max_new"], 0.0)
+            self.owner[rec["rid"]] = new_rep.idx
+            moved += 1
+        self.rebalanced += moved
         return moved
 
     # -- request path ---------------------------------------------------------
@@ -277,9 +556,21 @@ class Supervisor:
     def submit(self, prompt, max_new: int = 16,
                arrival_time: float = 0.0) -> Optional[int]:
         """Route one request into the cluster; returns its GLOBAL rid, or
-        None when every live replica's admission queue refused it."""
+        None when every live replica's admission queue refused it.
+
+        A fleet with no running replica is not necessarily lost: replicas
+        dead in restart backoff will reboot, a spawn may be mid-boot, a
+        draining replica is about to free capacity.  Those are
+        BACK-PRESSURE (``None`` — the caller retries), not failure;
+        :class:`ClusterError` is reserved for a fleet that can never
+        serve again (every replica permanently failed)."""
         prompt = np.asarray(prompt, np.int32)
         if not any(r.state == "running" for r in self.replicas):
+            if (self._spawn is not None or
+                    any(r.state in ("dead", "draining")
+                        for r in self.replicas)):
+                self.rejected += 1
+                return None
             raise ClusterError("no live replicas to route to")
         idx = self._route_submit(prompt, max_new, arrival_time,
                                  self._next_rid)
@@ -316,15 +607,15 @@ class Supervisor:
         new = ch[rep._dec_off:]
         rep._dec_off = len(ch)
         rep.acc_decode_ms += sum(new)
-        rep._pending_step_ms.extend(new)
         rep.acc_decode_tokens += eng.decode_tokens - rep._dec_tok_seen
         rep._dec_tok_seen = eng.decode_tokens
 
     def _health_check(self, rep: Replica):
         """Feed the step latencies accumulated since the last check into
-        this replica's StragglerMonitor (escalations surface in
-        :meth:`health`; the re-mesh policy hook is the elastic-scale
-        roadmap item)."""
+        this replica's StragglerMonitor.  A sustained escalation is acted
+        on by the elastic scale pass (proactive replacement) when
+        ``ClusterConfig.scale`` is set; otherwise it surfaces in
+        :meth:`health`."""
         for ms in rep._pending_step_ms:
             rep.monitor.observe(ms / 1e3)
         rep._pending_step_ms.clear()
@@ -339,7 +630,7 @@ class Supervisor:
                 "restarts": rep.restarts,
                 "straggler": rep.monitor.summary(),
             }
-            if rep.state == "running":
+            if rep.state in ("running", "draining") and rep.engine is not None:
                 snap = rep.engine.snapshot()
                 h.update(queue_depth=snap["queue_depth"],
                          active=snap["active"],
@@ -349,13 +640,20 @@ class Supervisor:
 
     # -- main loop ------------------------------------------------------------
     def _pending(self) -> bool:
-        running = [r for r in self.replicas if r.state == "running"]
-        if any(r.engine.has_work or r.replay_pending for r in running):
+        serving = [r for r in self.replicas
+                   if r.state in ("running", "draining")]
+        if any(r.engine.has_work or r.replay_pending for r in serving):
             return True
         if any(r.state == "dead" for r in self.replicas):
             return True               # a reboot (and maybe a replay) is owed
+        if self._spawn is not None:
+            return True               # a boot is in flight; attach is owed
+        if any(r.state == "draining" for r in self.replicas):
+            return True               # drained: retirement is owed
         stranded = [r for r in self.replicas
-                    if r.state == "failed" and r.journal.unfinished()]
+                    if r.state in ("failed", "retired")
+                    and r.journal.unfinished()]
+        running = [r for r in self.replicas if r.state == "running"]
         if stranded and not running:
             raise ClusterError(
                 "all replicas failed with requests outstanding: "
@@ -367,44 +665,78 @@ class Supervisor:
         supervisor passes elapse — ``stats["completed_all"]`` /
         ``stats["unfinished"]`` distinguish a drained cluster from a
         truncated run.  Stats are a window over THIS call, like
-        ``ServingEngine.run``."""
+        ``ServingEngine.run``.
+
+        Only passes that DO work charge the tick budget: a pass stalled
+        on restart backoff sleeps until the earliest live
+        ``backoff_until`` (not a fixed 1 ms), and a pass stalled on an
+        asynchronous spawn waits briefly — neither counts as a tick, so a
+        realistic ``backoff_s`` can no longer convert the budget into a
+        spurious ``completed_all=False`` truncation."""
         t0 = time.perf_counter()
         done0 = len(self._completed_order)
         ttft0 = len(self._ttft_ms)
         dec_tok0 = sum(r.acc_decode_tokens for r in self.replicas)
         dec_ms0 = sum(r.acc_decode_ms for r in self.replicas)
-        rep0 = [(r.ticks, r.served, r.acc_decode_tokens, r.acc_decode_ms)
-                for r in self.replicas]
+        # keyed by replica index, not zipped positionally: the fleet can
+        # GROW mid-run (elastic spawn), and a replica attached after this
+        # snapshot simply baselines at zero
+        rep0 = {r.idx: (r.ticks, r.served, r.acc_decode_tokens,
+                        r.acc_decode_ms) for r in self.replicas}
         ticks = 0
         while ticks < max_ticks and self._pending():
             progressed = False
-            for rep in self.replicas:
-                if rep.state == "failed":
+            for rep in list(self.replicas):
+                if rep.state in ("failed", "retired"):
                     if rep.journal.unfinished():
                         progressed |= self._reroute(rep) > 0
                     continue
                 if rep.state == "dead":
                     progressed |= self._maybe_restart(rep)
                     continue
-                if rep.replay_pending:
+                if rep.state == "running" and rep.replay_pending:
                     progressed |= self._drain_replay(rep) > 0
                 if not rep.engine.has_work:
                     continue
+                t_tick = time.perf_counter()
                 try:
                     rep.engine.tick()
                 except SimulatedFailure as e:
                     self._on_crash(rep, e)
                     progressed = True
                     continue
+                # supervised tick wall time is the straggler signal: it
+                # sees everything that slows the replica (decode program,
+                # paging, a degraded host), not just the decode hostcall
+                rep._pending_step_ms.append(
+                    (time.perf_counter() - t_tick) * 1e3)
                 rep.ticks += 1
                 progressed = True
                 self._pump(rep)
                 if rep.ticks % self.config.health_interval == 0:
                     self._health_check(rep)
-            ticks += 1
-            if not progressed:
-                # only restart backoffs can stall the loop; wait them out
-                time.sleep(1e-3)
+            if self.config.scale is not None:
+                self._scale_pass()
+            if progressed:
+                ticks += 1
+                continue
+            # stalled pass: nothing was serveable this time around
+            waits = [r.backoff_until for r in self.replicas
+                     if r.state == "dead"]
+            if waits:
+                # sleep the stall out in one step and charge no tick
+                time.sleep(max(0.0, min(waits) - time.perf_counter()))
+                continue
+            if self._spawn is not None:
+                time.sleep(1e-3)      # async boot in flight; attach soon
+                continue
+            ticks += 1                # backstop: unexplained no-progress
+            time.sleep(1e-3)          # still consumes budget
+        # flush telemetry stranded below a health_interval boundary, so
+        # short runs and drained replicas still feed their monitors
+        for rep in self.replicas:
+            if rep._pending_step_ms:
+                self._health_check(rep)
         wall = time.perf_counter() - t0
         # outstanding work across the fleet's journals (moved records count
         # once, in their new owner's journal): non-zero means this call hit
@@ -422,9 +754,13 @@ class Supervisor:
             "tok_per_s": tokens / wall if wall else 0.0,
             "ticks": ticks,
             "replicas": len(self.replicas),
+            "running_replicas": sum(1 for r in self.replicas
+                                    if r.state == "running"),
             "kills": self.kills,
             "rerouted": self.rerouted,
             "rejected": self.rejected,
+            "retired": self.retired,
+            "rebalanced": self.rebalanced,
             "unfinished": unfinished,
             "completed_all": unfinished == 0,
             "decode_tokens": dec_tok,
@@ -436,6 +772,7 @@ class Supervisor:
                             if ttft else None),
             "recoveries": [dict(rec) for rep in self.replicas
                            for rec in rep.recoveries],
+            "scale_events": [dict(e) for e in self.scale_events],
             "per_replica": [
                 {"replica": rep.idx, "state": rep.state,
                  "ticks": rep.ticks - tk0, "served": rep.served - sv0,
@@ -445,18 +782,29 @@ class Supervisor:
                                       ((rep.acc_decode_ms - dms0) / 1e3)
                                       if rep.acc_decode_ms > dms0 else 0.0),
                  "escalations": rep.monitor.escalations}
-                for rep, (tk0, sv0, dtok0, dms0)
-                in zip(self.replicas, rep0)],
+                for rep in self.replicas
+                for tk0, sv0, dtok0, dms0
+                in [rep0.get(rep.idx, (0, 0, 0, 0.0))]],
         }
         return stats
 
     # -- introspection --------------------------------------------------------
+    @property
+    def spawning(self) -> bool:
+        """True while an asynchronous replica boot is in flight — callers
+        pacing a cooperative serving loop can yield extra wall time to the
+        boot thread instead of contending with it."""
+        return self._spawn is not None
+
     def report(self) -> Dict[str, Any]:
         rep: Dict[str, Any] = {
             "replicas": len(self.replicas),
             "router": self.config.router,
             "kills": self.kills,
             "rerouted": self.rerouted,
+            "retired": self.retired,
+            "rebalanced": self.rebalanced,
+            "scale_events": [dict(e) for e in self.scale_events],
             "health": self.health(),
         }
         if self.store is not None:

@@ -32,7 +32,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 __all__ = ["PagingConfig", "PrefixConfig", "SpecConfig", "HorizonConfig",
-           "ShardConfig", "EngineConfig", "ClusterConfig",
+           "ShardConfig", "EngineConfig", "ScaleConfig", "ClusterConfig",
            "ROUTER_POLICIES"]
 
 # router policies a ClusterConfig may name (repro.cluster.router implements
@@ -284,6 +284,57 @@ class EngineConfig:
 
 
 @dataclass(frozen=True)
+class ScaleConfig:
+    """Elastic fleet scaling for a serving cluster (repro.cluster).
+
+    The supervisor watches normalized fleet load — per running replica,
+    ``(active slots + routed queue depth) / batch`` plus paged-arena
+    pressure, the same basis ``Router.load`` ranks on — and resizes the
+    fleet between ``min_replicas`` and ``max_replicas``:
+
+      * load >= ``high_watermark`` for ``sustain_window`` consecutive
+        supervisor passes spawns one replica, booted WARM from the shared
+        ProgramStore (and PrefixStore) mid-run, then rebalances queued
+        (never active) requests onto it through the journal ``moved``
+        path;
+      * load <= ``low_watermark`` sustained, with some replica idle that
+        whole window, quiesces the idle replica: routing stops, its
+        in-flight batch drains, then it retires and its journal/telemetry
+        fold into the fleet accumulators;
+      * a sustained straggler escalation (repro.runtime.fault.
+        StragglerMonitor) replaces the slow replica outright: a fresh
+        warm replica boots, the victim's unfinished requests re-route via
+        the journal, the victim retires.  Replacement is capacity-neutral
+        and therefore allowed even at ``max_replicas``.
+
+    ``cooldown`` supervisor passes must elapse between scale actions so
+    one burst cannot thrash the fleet.  ``async_spawn`` boots the new
+    engine on a background thread — serving never stalls behind the
+    ~100 ms warm boot (benchmarks); the default keeps the boot on the
+    supervisor thread so the whole schedule stays deterministic on the
+    step clock (tests).
+    """
+    min_replicas: int = 1
+    max_replicas: int = 4
+    high_watermark: float = 0.85
+    low_watermark: float = 0.15
+    sustain_window: int = 3
+    cooldown: int = 8
+    async_spawn: bool = False
+
+    def __post_init__(self):
+        assert 1 <= self.min_replicas <= self.max_replicas, \
+            (self.min_replicas, self.max_replicas)
+        assert 0.0 <= self.low_watermark < self.high_watermark, \
+            (self.low_watermark, self.high_watermark)
+        assert self.sustain_window >= 1, self.sustain_window
+        assert self.cooldown >= 0, self.cooldown
+
+    def replace(self, **kw) -> "ScaleConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class ClusterConfig:
     """A multi-replica serving cluster, as one frozen value object
     (repro.cluster): N identical :class:`EngineConfig` replicas behind one
@@ -303,6 +354,14 @@ class ClusterConfig:
     health_interval: supervisor ticks between health checks per replica
         (each check feeds new step-latency telemetry into that replica's
         StragglerMonitor).
+    straggler_threshold / straggler_patience: the per-replica
+        StragglerMonitor policy — a supervised tick slower than
+        ``threshold x`` the replica's rolling median is a straggler
+        observation, ``patience`` consecutive observations escalate (and,
+        with ``scale`` set, trigger proactive replacement).  Benchmarks
+        that boot replicas on a background thread raise these: in a
+        cooperative single-process fleet a concurrent warm boot inflates
+        every replica's tick wall, which is contention, not a straggler.
     max_restarts / backoff_s / backoff_factor: the serving-side restart
         policy (repro.runtime.fault.RestartPolicy): a crashed replica is
         rebooted at most ``max_restarts`` times, the n-th reboot delayed
@@ -313,24 +372,39 @@ class ClusterConfig:
     journal_dir: directory for the durable per-replica request journals;
         ``None`` keeps them in supervisor memory (kill-safe, not
         process-crash-safe).
+    scale: elastic fleet scaling policy (:class:`ScaleConfig`); ``None``
+        keeps the fleet fixed at ``replicas``.  When set, ``replicas`` is
+        the *initial* fleet size and must sit inside
+        ``[min_replicas, max_replicas]``.
     """
     engine: EngineConfig = EngineConfig()
     replicas: int = 2
     router: str = "least_loaded"
     affinity_len: int = 8
     health_interval: int = 8
+    straggler_threshold: float = 1.5
+    straggler_patience: int = 3
     max_restarts: int = 3
     backoff_s: float = 0.0
     backoff_factor: float = 2.0
     store_dir: Optional[str] = None
     journal_dir: Optional[str] = None
+    scale: Optional[ScaleConfig] = None
 
     def __post_init__(self):
         assert self.replicas >= 1, self.replicas
+        if self.scale is not None:
+            assert (self.scale.min_replicas <= self.replicas
+                    <= self.scale.max_replicas), \
+                "initial replica count must sit inside the elastic " \
+                f"range: {self.scale.min_replicas} <= {self.replicas} " \
+                f"<= {self.scale.max_replicas}"
         assert self.router in ROUTER_POLICIES, \
             (self.router, ROUTER_POLICIES)
         assert self.affinity_len >= 1, self.affinity_len
         assert self.health_interval >= 1, self.health_interval
+        assert self.straggler_threshold > 1.0, self.straggler_threshold
+        assert self.straggler_patience >= 1, self.straggler_patience
         assert self.max_restarts >= 0, self.max_restarts
         assert self.backoff_s >= 0 and self.backoff_factor >= 1, \
             (self.backoff_s, self.backoff_factor)
@@ -350,6 +424,8 @@ class ClusterConfig:
         d = dict(d)
         if isinstance(d.get("engine"), dict):
             d["engine"] = EngineConfig.from_dict(d["engine"])
+        if isinstance(d.get("scale"), dict):
+            d["scale"] = ScaleConfig(**d["scale"])
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
         if unknown:

@@ -347,6 +347,8 @@ class ServingEngine:
         self.rejected = 0
         self.refill_admissions = 0     # admissions while other slots active
         self._n_submitted = 0
+        self.draining = False          # quiescing: no new admissions, the
+                                       # in-flight batch runs to completion
         self._t0 = time.perf_counter()
 
     # -- clock ----------------------------------------------------------------
@@ -366,7 +368,7 @@ class ServingEngine:
         identity across replicas and failover replays (the internal
         counter advances past any pinned id, so later default submissions
         never collide)."""
-        if len(self.queue) >= self.max_queue:
+        if self.draining or len(self.queue) >= self.max_queue:
             self.rejected += 1
             return None
         prompt = np.asarray(prompt, np.int32)[-self.prefill_len:]
@@ -821,6 +823,26 @@ class ServingEngine:
         """True while any request is queued or occupies a slot."""
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def begin_drain(self):
+        """Enter drain mode: every later :meth:`submit` is refused (the
+        caller routes elsewhere) while already-accepted work — queued and
+        in-flight — runs to completion.  The quiesce half of an elastic
+        shrink: the supervisor stops routing here, waits for
+        ``has_work`` to clear, then retires the replica."""
+        self.draining = True
+
+    def withdraw(self, rid: int) -> Optional[Request]:
+        """Remove and return a QUEUED request by id, or ``None`` if ``rid``
+        is not withdrawable: already in a slot, preempted (its KV lives in
+        the pager — moving it would orphan the blocks), or unknown.  Used
+        by elastic rebalancing to move never-started requests onto a
+        freshly spawned replica; a withdrawn request holds no engine
+        state, so resubmitting its prompt elsewhere is exact."""
+        for qi, r in enumerate(self.queue):
+            if r.rid == rid and not r.needs_resume:
+                return self.queue.pop(qi)
+        return None
+
     def tick(self) -> bool:
         """One SUPERVISED engine iteration — the step-level API a cluster
         supervisor drives instead of ``run()``'s closed loop.
@@ -852,6 +874,7 @@ class ServingEngine:
             "inflight_rids": sorted([r.rid for r in active] +
                                     [r.rid for r in self.queue]),
             "completed": len(self.completed),
+            "draining": self.draining,
             "arena_occupancy": (self.pager.arena_occupancy()
                                 if self.paged else 0.0),
         }

@@ -40,8 +40,12 @@ class ElasticPlan:
         return new / old
 
     def batch_advice(self, global_batch: int) -> int:
-        """Keep per-device batch constant: rescale the global batch."""
-        return max(1, int(global_batch * self.scale_factor))
+        """Keep per-device batch constant: rescale the global batch.
+
+        Rounds to nearest — truncation would bias every non-integer scale
+        factor downward (e.g. 3 -> 2 pods at global batch 4 truncated to
+        2 instead of 3, shrinking the per-device batch by a third)."""
+        return max(1, round(global_batch * self.scale_factor))
 
     def validate(self, model_axis: str = "model"):
         if self.old_axes.get(model_axis) != self.new_axes.get(model_axis):

@@ -67,6 +67,14 @@ class StragglerMonitor:
             self.flags = 0
         return False
 
+    def reset_window(self):
+        """Forget the rolling step-time window (and any partial flag run)
+        but keep the cumulative ``escalations`` count.  Called when the
+        monitored engine is replaced: a fresh boot's step times must not
+        be judged against the dead engine's median."""
+        self.times.clear()
+        self.flags = 0
+
     def summary(self) -> Dict[str, float]:
         if not self.times:
             return {"median_s": 0.0, "p99_s": 0.0, "escalations": 0}

@@ -58,6 +58,40 @@ def test_router_round_robin_cycles_live_replicas():
     assert all(r.rank(np.arange(2), snaps)[0] in (0, 2) for _ in range(4))
 
 
+def test_router_round_robin_cursor_stable_under_membership_change():
+    """ISSUE 9 satellite: the rotation tracks the last-ROUTED replica, not
+    a pass count taken modulo fleet size (regression: every elastic
+    grow/shrink re-aliased the cursor and skewed the rotation)."""
+    r = Router("round_robin")
+    snaps3 = {0: _snap(), 1: _snap(), 2: _snap()}
+    assert [r.rank([], snaps3)[0] for _ in range(2)] == [0, 1]
+    # replica 1 retires mid-rotation: the next pick is the first live
+    # replica strictly after the last-served one (the old `count % 2`
+    # cursor would have served 0 again here, starving 2)
+    snaps2 = {0: _snap(), 2: _snap()}
+    assert r.rank([], snaps2)[0] == 2
+    # the fleet grows mid-rotation: continue after 2, no re-alias
+    snaps4 = {i: _snap() for i in range(4)}
+    assert r.rank([], snaps4)[0] == 3
+    assert r.rank([], snaps4)[0] == 0
+
+
+def test_router_evict_drops_sticky_entries_for_retired_replica():
+    """ISSUE 9 satellite: retiring a replica reclaims its sticky affinity
+    entries immediately instead of leaking them until STICKY_CAP."""
+    r = Router("prefix_affinity", affinity_len=4)
+    p = np.asarray([3, 1, 4, 1], np.int32)
+    q = np.asarray([2, 7, 1, 8], np.int32)
+    r.record(p, 1)
+    r.record(q, 2)
+    assert len(r._sticky) == 2
+    r.evict(1)
+    assert list(r._sticky.values()) == [2]
+    # the evicted prefix degrades to the deterministic hash bucket
+    snaps = {0: _snap(), 1: _snap(active=2, queue=5), 2: _snap()}
+    assert r.rank(p, snaps)[0] == sorted(snaps)[r._affinity_key(p) % 3]
+
+
 def test_router_prefix_affinity_is_sticky_and_deterministic():
     r = Router("prefix_affinity", affinity_len=4)
     snaps = {i: _snap() for i in range(4)}
@@ -332,6 +366,65 @@ def test_cluster_all_replicas_failed_raises(tmp_path):
         sup.run()
     with pytest.raises(ClusterError):
         sup.submit(np.arange(1, 4), max_new=2)
+
+
+def test_cluster_submit_during_full_fleet_backoff_backpressures(tmp_path):
+    """ISSUE 9 satellite: a fleet whose every replica is merely dead in
+    restart backoff is a TRANSIENT outage — submit must back-pressure
+    (None, caller retries), not raise ClusterError (regression: it raised
+    'no live replicas', reporting a recoverable stall as permanent).  And
+    the backoff stall is slept out in one step, not charged against the
+    tick budget 1 ms per pass."""
+    ccfg = ClusterConfig(engine=_engine_cfg(), replicas=2, max_restarts=2,
+                         backoff_s=0.3, store_dir=str(tmp_path / "store"))
+    inj0, inj1 = FaultInjector([2]), FaultInjector([2])
+    sup = Supervisor(ARCH, ccfg, fault_hooks={0: inj0.check, 1: inj1.check})
+    rids = [sup.submit(p, max_new=m) for p, m in _workload(4, seed=5)]
+    sup.run(max_ticks=3)               # both replicas crash at step 2
+    assert sup.kills == 2
+    assert all(r.state == "dead" for r in sup.replicas)
+    assert all(r.backoff_until > 0 for r in sup.replicas)
+    # the whole fleet is in backoff: back-pressure, no raise
+    assert sup.submit(np.arange(1, 5), max_new=3) is None
+    assert sup.rejected == 1
+    stats = sup.run()
+    # both replicas rebooted and every original request completed
+    assert stats["completed_all"] and sorted(sup.streams) == rids
+    assert all(r.state == "running" for r in sup.replicas)
+    # the 0.3 s stall cost ~one uncounted pass, not ~300 budget ticks
+    assert stats["ticks"] < 200, stats["ticks"]
+    sup.close()
+
+
+def test_cluster_crash_flushes_step_telemetry_and_resets_window(tmp_path):
+    """ISSUE 9 satellite: the step-latency samples accumulated since the
+    last health boundary are flushed into the StragglerMonitor at crash
+    time (regression: with a large health_interval, exactly the slow
+    steps preceding a crash were stranded in _pending_step_ms), and a
+    reboot resets the monitor's rolling window — a fresh engine is not
+    judged against the dead engine's median — while the cumulative
+    escalation count survives."""
+    ccfg = ClusterConfig(engine=_engine_cfg(), replicas=1,
+                         health_interval=1000,
+                         store_dir=str(tmp_path / "store"))
+    inj = FaultInjector(fail_at_steps=[3])
+    sup = Supervisor(ARCH, ccfg, fault_hooks={0: inj.check})
+    rid = sup.submit(np.arange(1, 6), max_new=6)
+    sup.run(max_ticks=4)               # passes 1-3 tick; pass 4 crashes
+    assert sup.kills == 1
+    mon = sup.replicas[0].monitor
+    # the 3 pre-crash samples reached the monitor despite the huge
+    # health_interval — the crash flushed them
+    assert len(mon.times) == 3, mon.times
+    assert sup.replicas[0]._pending_step_ms == []
+    mon.times.append(99.0)             # sentinel: the reboot must drop it
+    mon.escalations = 7                # sentinel: the reboot must keep it
+    stats = sup.run()
+    assert stats["completed_all"] and sup.streams[rid]
+    assert 99.0 not in mon.times       # rolling window reset per boot
+    assert len(mon.times) > 0          # ...and re-fed by the new engine
+    assert mon.escalations == 7        # cumulative count preserved
+    sup.close()
 
 
 def test_cluster_health_and_per_replica_stats(tmp_path):
