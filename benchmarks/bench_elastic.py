@@ -19,12 +19,12 @@ identical arrivals).  Gates, recorded into ``BENCH_elastic.json``:
   * zero lost requests, and merged streams byte-identical to a static
     4-replica fleet fed the same schedule.
 
-Straggler detection is disabled for this bench
-(``straggler_threshold=1e9``): replicas here are threads of one process,
-so a concurrent warm boot inflates every replica's supervised tick wall —
-that is GIL contention, not a straggler, and a real deployment boots
-replicas on their own cores.  Replacement has its own test gate
-(tests/test_elastic_cluster.py).
+Straggler detection is disabled for this bench by its named switch
+(``ScaleConfig(straggler_detection=False)``): replicas here are threads
+of one process, so a concurrent warm boot inflates every replica's
+supervised tick wall — that is GIL contention, not a straggler, and a
+real deployment boots replicas on their own cores.  Replacement has its
+own test gate (tests/test_elastic_cluster.py).
 """
 from __future__ import annotations
 
@@ -137,7 +137,8 @@ def run(smoke: bool = False, arch: str = "qwen3-0.6b", store_dir=None):
                         clock="step", seed=0)
     scale = ScaleConfig(min_replicas=1, max_replicas=4,
                         high_watermark=0.3, low_watermark=0.02,
-                        sustain_window=3, cooldown=12, async_spawn=True)
+                        sustain_window=3, cooldown=12, async_spawn=True,
+                        straggler_detection=False)
     sched, marks = _schedule(np.random.default_rng(0), counts)
 
     def _pool(rng=np.random.default_rng(1)):
@@ -149,8 +150,11 @@ def run(smoke: bool = False, arch: str = "qwen3-0.6b", store_dir=None):
         tmp = store_dir = tempfile.mkdtemp(prefix="bench_elastic_store_")
     try:
         # -- elastic cell: 1 replica + ScaleConfig, ramped traffic --------
+        # straggler_detection=False (in ``scale``) replaces the old
+        # magic straggler_threshold=1e9: escalations are still observed
+        # and reported, but never trigger a replacement spawn
         sup = Supervisor(arch, ClusterConfig(
-            engine=ecfg, replicas=1, scale=scale, straggler_threshold=1e9),
+            engine=ecfg, replicas=1, scale=scale),
             store=ProgramStore(store_dir))
         t0 = time.perf_counter()
         rids, ttft_marks = _drive(sup, sched, marks=marks,
@@ -168,8 +172,10 @@ def run(smoke: bool = False, arch: str = "qwen3-0.6b", store_dir=None):
         sup.close()
 
         # -- static 4-replica fleet replays the identical schedule --------
+        # no ScaleConfig -> the fixed fleet never runs a scale pass, so
+        # straggler replacement cannot fire here by construction
         sup4 = Supervisor(arch, ClusterConfig(
-            engine=ecfg, replicas=4, straggler_threshold=1e9),
+            engine=ecfg, replicas=4),
             params=params, store=ProgramStore(store_dir))
         rids4, _ = _drive(sup4, sched)
         stats4 = sup4.run()
@@ -214,7 +220,8 @@ def run(smoke: bool = False, arch: str = "qwen3-0.6b", store_dir=None):
                   "high_watermark": scale.high_watermark,
                   "low_watermark": scale.low_watermark,
                   "sustain_window": scale.sustain_window,
-                  "cooldown": scale.cooldown, "async_spawn": True},
+                  "cooldown": scale.cooldown, "async_spawn": True,
+                  "straggler_detection": scale.straggler_detection},
         "requests": n_req,
         "intervals_passes": INTERVALS,
         "env": {"jax": __import__("jax").__version__,

@@ -22,16 +22,17 @@ def main() -> None:
                     help="toy sizes for CI (<60 s total)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_boot, bench_cluster, bench_elastic,
-                            bench_fused, bench_hostcall, bench_load_exec,
-                            bench_paging, bench_pipeline, bench_placement,
-                            bench_prefix, bench_roofline, bench_spec,
-                            bench_tp, bench_treeload)
+    from benchmarks import (bench_autotune, bench_boot, bench_cluster,
+                            bench_elastic, bench_fused, bench_hostcall,
+                            bench_load_exec, bench_paging, bench_pipeline,
+                            bench_placement, bench_prefix, bench_roofline,
+                            bench_spec, bench_tp, bench_treeload)
     modules = [
         ("load_exec(Table1+Fig2)", bench_load_exec),
         ("boot(Table1-store)", bench_boot),
         ("cluster(fleet-failover)", bench_cluster),
         ("elastic(fleet-scale)", bench_elastic),
+        ("autotune(knob-search)", bench_autotune),
         ("paging(S3.4-kv)", bench_paging),
         ("prefix(S3.4-sharing)", bench_prefix),
         ("spec(Table1-decode)", bench_spec),

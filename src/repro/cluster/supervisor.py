@@ -211,6 +211,19 @@ class Supervisor:
                              prefix_store=self.prefix_store,
                              fault_hook=self.fault_hooks.get(idx))
 
+    def adopt_overlay(self, overlay: Dict[str, Any]):
+        """Adopt an autotuned ``EngineConfig`` overlay
+        (repro.runtime.autotune) for every FUTURE engine boot — elastic
+        spawns, failover reboots, straggler replacements.  Running
+        replicas keep their current knobs: the fleet converges to the
+        tuned config replica by replica as they cycle, each boot going
+        through the ordinary ProgramStore path (new knobs -> new
+        fingerprints -> at most one cold compile fleet-wide per adopted
+        config, warm everywhere after)."""
+        from repro.runtime.autotune import apply_overlay
+        self.config = self.config.replace(
+            engine=apply_overlay(self.config.engine, overlay))
+
     def _on_crash(self, rep: Replica, err: Exception):
         """A tick raised: the engine is gone, with every in-flight request
         — which is exactly what the journal still holds."""
@@ -353,14 +366,20 @@ class Supervisor:
         if self._spawn is not None:
             return                    # one boot in flight at a time
         # straggler replacement first: capacity-neutral, so neither the
-        # max_replicas cap nor the load watermarks gate it
-        for rep in running:
-            if rep.monitor.escalations > rep._esc_handled:
-                rep._esc_handled = rep.monitor.escalations
-                self._begin_spawn("replace", victim=rep.idx,
-                                  reason=f"straggler escalation "
-                                         f"#{rep.monitor.escalations}")
-                return
+        # max_replicas cap nor the load watermarks gate it.  The named
+        # ScaleConfig.straggler_detection switch turns only this action
+        # off (escalations are still observed and reported) — cooperative
+        # single-process benchmarks use it because a concurrent warm boot
+        # inflates every replica's tick wall via the GIL, which is
+        # contention, not a straggler.
+        if cfg.straggler_detection:
+            for rep in running:
+                if rep.monitor.escalations > rep._esc_handled:
+                    rep._esc_handled = rep.monitor.escalations
+                    self._begin_spawn("replace", victim=rep.idx,
+                                      reason=f"straggler escalation "
+                                             f"#{rep.monitor.escalations}")
+                    return
         cooled = self._pass - self._last_scale >= cfg.cooldown
         if (cooled and self._high_run >= cfg.sustain_window
                 and len(running) < cfg.max_replicas):

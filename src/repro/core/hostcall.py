@@ -52,6 +52,11 @@ class HostCallTable:
         self.log_lines: list = []
         self.metrics: Dict[str, list] = {}
         self.step_times: list = []
+        # Parallel to step_times: monotonic host timestamp of each step
+        # report (None when the caller predates the timestamped telemetry).
+        # Kept as a separate list so step_times stays a (step, wall_s)
+        # 2-tuple channel for existing consumers.
+        self.step_stamps: list = []
         self.checkpoint_requests: list = []
         self._register_builtins()
 
@@ -87,8 +92,9 @@ class HostCallTable:
     def _metric(self, name_code, value):
         self.metrics.setdefault(int(name_code), []).append(float(value))
 
-    def _step_report(self, step, wall_s):
+    def _step_report(self, step, wall_s, t=None):
         self.step_times.append((int(step), float(wall_s)))
+        self.step_stamps.append(None if t is None else float(t))
 
     def _ckpt_request(self, step):
         self.checkpoint_requests.append(int(step))

@@ -325,8 +325,16 @@ class Syscore:
                    "mean": sum(vals) / len(vals),
                    "last": vals[-1]}
             for code, vals in self.hostcalls.metrics.items() if vals}
+        stamps = [t for t in self.hostcalls.step_stamps if t is not None]
         return {"metrics": metrics,
                 "step_reports": len(self.hostcalls.step_times),
+                # monotonic per-dispatch stamps (CALL_STEP_REPORT arg 3):
+                # span covers the window since the last drain, so a
+                # supervisor can turn step walls into utilization without
+                # engine-side state
+                "step_stamps": len(stamps),
+                "step_span_s": (stamps[-1] - stamps[0]) if len(stamps) > 1
+                               else 0.0,
                 "log_lines": len(self.hostcalls.log_lines)}
 
 

@@ -1,8 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# NOTE: the two lines above MUST run before any jax import (jax locks the
-# device count at first init).  This module is the ONLY place that forces 512
-# placeholder devices — smoke tests and benchmarks see the real single device.
+if __name__ == "__main__":
+    # CLI mode only: force 512 placeholder devices so the production meshes
+    # exist on a CPU host.  MUST run before any jax import (jax locks the
+    # device count at first init) — which is why it is gated: library
+    # importers (the autotuner's cost model, tests) must see the process's
+    # real device topology, not have it hijacked by a transitive import.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -41,6 +44,68 @@ def input_specs(arch: str, shape: str, **kw):
     """ShapeDtypeStruct stand-ins for every model input of a cell."""
     spec = registry.cell_spec(arch, shape, **kw)
     return tree_structs(spec.abstract_args)
+
+
+def lower_serve_programs(arch: str, config, programs=None) -> dict:
+    """Abstractly lower + compile the serving programs an
+    ``EngineConfig`` would hot-load, without allocating params or caches.
+
+    The dry-run recipe (ShapeDtypeStruct stand-ins -> jit.lower.compile)
+    applied to ``steps.serve_program_specs``: every input is abstract, so
+    the only real cost is XLA compile time — this is how the autotuner's
+    cost model prices knob settings that change program shape (a different
+    horizon H, kv_block, spec_k, batch) without ever running them.
+
+    ``programs`` optionally restricts to a subset of names (the cost
+    model wants decode-path programs only).  Single-device lowering:
+    ``config.shard`` is ignored — per-device cost of a TP engine is
+    approximated by total/n downstream, and the ProgramStore keys warm
+    boots per mesh shape separately.
+
+    Returns ``{name: record}`` with, per program:
+      hlo            compiled HLO text (feed to ``hlo_analysis.analyze``)
+      cost           loop-aware ``hlo_analysis.Cost`` (1 device)
+      out_shape      output tree of (shape, dtype) pairs from eval_shape
+      memory         ``memory_analysis()`` argument/output/temp bytes
+      lower_s / compile_s
+    """
+    from repro import steps as steps_lib
+    from repro.engine_config import ShardConfig
+
+    if config.shard.n_devices > 1:
+        config = config.replace(shard=ShardConfig())
+    cfg = registry.get_config(arch, reduced=config.reduced)
+    rules = make_rules()
+    specs = steps_lib.serve_program_specs(cfg, rules, config)
+    out = {}
+    for name, spec in specs.items():
+        if programs is not None and name not in programs:
+            continue
+        structs = tree_structs(spec.abstract_args)
+        shapes = jax.eval_shape(spec.fn, *structs)
+        t0 = time.time()
+        jf = jax.jit(spec.fn, donate_argnums=spec.donate_argnums)
+        lowered = jf.lower(*structs)
+        lower_s = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        hlo = compiled.as_text()
+        ma = compiled.memory_analysis()
+        out[name] = {
+            "hlo": hlo,
+            "cost": ha.analyze(hlo, 1),
+            "out_shape": jax.tree.map(
+                lambda s: (tuple(s.shape), str(s.dtype)), shapes),
+            "memory": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+            },
+            "lower_s": round(lower_s, 3),
+            "compile_s": round(compile_s, 3),
+        }
+    return out
 
 
 def _default_knobs(spec) -> dict:

@@ -198,7 +198,7 @@ class ServingEngine:
     def __init__(self, arch: str, config: Optional[EngineConfig] = None, *,
                  params=None, mesh=None,
                  store: Optional[ProgramStore] = None,
-                 prefix_store=None, fault_hook=None, **legacy):
+                 prefix_store=None, fault_hook=None, trace=None, **legacy):
         if config is None:
             config = EngineConfig.from_legacy_kwargs(**legacy)
             if legacy:
@@ -216,6 +216,11 @@ class ServingEngine:
         # step count at the top of every tick(); raising SimulatedFailure
         # (repro.runtime.fault) models this replica crashing mid-serving
         self.fault_hook = fault_hook
+        # injectable trace recorder (runtime.autotune.TraceLog): observes
+        # submits, admissions, decode-path dispatches and completions so a
+        # serving run can be replay-simulated under different knobs.  A
+        # None trace costs one attribute test per event.
+        self.trace = trace
         self.reduced = config.reduced
         self.cfg = registry.get_config(arch, reduced=config.reduced)
         assert not self.cfg.is_encdec, "decoder-only serving engine"
@@ -350,6 +355,8 @@ class ServingEngine:
         self.draining = False          # quiescing: no new admissions, the
                                        # in-flight batch runs to completion
         self._t0 = time.perf_counter()
+        if self.trace is not None:
+            self.trace.on_boot(arch, config)
 
     # -- clock ----------------------------------------------------------------
     def now(self) -> float:
@@ -385,6 +392,8 @@ class ServingEngine:
         self._n_submitted = max(self._n_submitted, int(rid) + 1)
         bisect.insort(self.queue, req,
                       key=lambda r: (r.arrival_time, r.rid))
+        if self.trace is not None:
+            self.trace.on_submit(req)
         return req
 
     def _place(self, slot: int, req: Request, last_logits: np.ndarray):
@@ -413,6 +422,8 @@ class ServingEngine:
             self.refill_admissions += 1
         self.syscore.hostcalls.dispatch(
             CALL_METRIC, METRIC_TTFT_MS, 1e3 * req.ttft_s)
+        if self.trace is not None:
+            self.trace.on_admit(req)
         self._maybe_finish(req)   # max_new == 1 or instant EOS
 
     def _pin_caches(self):
@@ -431,11 +442,17 @@ class ServingEngine:
         self._pin_caches()
         tokens = np.zeros((1, self.prefill_len), np.int32)
         tokens[0, :req.prompt_len] = req.prompt
+        t1 = time.perf_counter()
         self.caches, last = self._prefill_slot(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(slot, jnp.int32),
             jnp.asarray(req.prompt_len, jnp.int32))
-        self._place(slot, req, np.asarray(last))
+        last = np.asarray(last)            # blocks on the device result
+        if self.trace is not None:
+            self.trace.on_dispatch("prefill_slot",
+                                   time.perf_counter() - t1, active=1,
+                                   tokens=0, rid=req.rid)
+        self._place(slot, req, last)
 
     def _admit_offset(self, slot: int, req: Request, offset: int):
         """Warm admission (prefix hit): the slot's leading ``offset`` prompt
@@ -450,11 +467,17 @@ class ServingEngine:
             (req.rid, offset, req.prompt_len)
         tokens = np.zeros((1, self.prefix_suffix), np.int32)
         tokens[0, :len(suffix)] = suffix
+        t1 = time.perf_counter()
         self.caches, last = self._prefill_offset(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(slot, jnp.int32), jnp.asarray(offset, jnp.int32),
             jnp.asarray(req.prompt_len, jnp.int32))
-        self._place(slot, req, np.asarray(last))
+        last = np.asarray(last)            # blocks on the device result
+        if self.trace is not None:
+            self.trace.on_dispatch("prefill_offset",
+                                   time.perf_counter() - t1, active=1,
+                                   tokens=0, rid=req.rid)
+        self._place(slot, req, last)
 
     def _admit_burst(self, reqs: List[Request]):
         """Cold-start burst: admit every request in ONE execution of the
@@ -466,10 +489,14 @@ class ServingEngine:
         for i, req in enumerate(reqs):
             tokens[i, :req.prompt_len] = req.prompt
             lengths[i] = req.prompt_len
+        t1 = time.perf_counter()
         self.caches, last = self._prefill(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(lengths))
         last = np.asarray(last)
+        if self.trace is not None:
+            self.trace.on_dispatch("prefill", time.perf_counter() - t1,
+                                   active=len(reqs), tokens=0)
         for i, req in enumerate(reqs):
             self._place(i, req, last[i])
 
@@ -604,6 +631,8 @@ class ServingEngine:
             req.t_done = time.perf_counter()
             self._proposers.pop(req.rid, None)
             self.completed.append(req)
+            if self.trace is not None:
+                self.trace.on_done(req)
             if self.paged and req.rid in self.pager.pages:
                 # idle-slot swap-out's terminal case: the request is done,
                 # so its blocks free instead of swapping.  This must run
@@ -617,18 +646,26 @@ class ServingEngine:
             if req.slot >= 0:
                 self.slots[req.slot] = None
 
-    def _step_metrics(self, dt: float, occupancy: float, extra=()):
+    def _step_metrics(self, dt: float, occupancy: float, extra=(),
+                      program: str = "decode", active: int = 0,
+                      tokens: int = 0, trace_extra=None):
         """ONE aggregated hostcall round trip per engine step (CALL_BATCH)
         carrying what used to be 4-5 separate dispatches: decode latency,
-        occupancy, optional gauges and the step report."""
+        occupancy, optional gauges and the step report — stamped with the
+        monotonic host clock so a recorded trace replays with real
+        inter-dispatch gaps."""
         calls = [(CALL_METRIC, METRIC_DECODE_MS, 1e3 * dt),
                  (CALL_METRIC, METRIC_OCCUPANCY, occupancy)]
         calls.extend(extra)
         if self.paged:
             calls.append((CALL_METRIC, METRIC_ARENA_OCCUPANCY,
                           self.pager.arena_occupancy()))
-        calls.append((CALL_STEP_REPORT, self.decode_steps, dt))
+        calls.append((CALL_STEP_REPORT, self.decode_steps, dt,
+                      time.perf_counter()))
         self.syscore.hostcalls.dispatch(CALL_BATCH, calls)
+        if self.trace is not None:
+            self.trace.on_dispatch(program, dt, active=active,
+                                   tokens=tokens, **(trace_extra or {}))
 
     def _decode_once(self):
         self._pin_caches()
@@ -644,7 +681,8 @@ class ServingEngine:
         dt = time.perf_counter() - t1
         self.decode_steps += 1
         self.decode_tokens += active
-        self._step_metrics(dt, active / self.batch)
+        self._step_metrics(dt, active / self.batch, program="decode",
+                           active=active, tokens=active)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -701,6 +739,7 @@ class ServingEngine:
         self.decode_steps += 1
         self.spec_steps += 1
         accepted = 0
+        toks0 = self.decode_tokens
         for i, req in enumerate(list(self.slots)):
             if req is None:
                 continue
@@ -723,7 +762,11 @@ class ServingEngine:
         self.accepted_drafts += accepted
         self._step_metrics(dt, active / self.batch,
                            extra=[(CALL_METRIC, METRIC_SPEC_ACCEPT,
-                                   accepted / drafted)])
+                                   accepted / drafted)],
+                           program="verify", active=active,
+                           tokens=self.decode_tokens - toks0,
+                           trace_extra={"drafted": drafted,
+                                        "accepted": accepted})
 
     # -- fused decode horizons ------------------------------------------------
     def _budget_left(self, req: Request) -> int:
@@ -815,7 +858,9 @@ class ServingEngine:
         ran = [float(o) for o in occ if o > 0]
         extra = [(CALL_METRIC, METRIC_OCCUPANCY, o) for o in ran[1:]]
         extra.append((CALL_METRIC, METRIC_HORIZON_TOKENS, float(emitted)))
-        self._step_metrics(dt, ran[0] if ran else 0.0, extra=extra)
+        self._step_metrics(dt, ran[0] if ran else 0.0, extra=extra,
+                           program="decode_horizon", active=active,
+                           tokens=emitted)
         return dt
 
     @property
@@ -1011,6 +1056,7 @@ class ServingEngine:
         hc.drain_metrics(keep=(METRIC_PROGRAM_COMPILE_MS,
                                METRIC_PROGRAM_LOAD_MS))
         hc.step_times.clear()
+        hc.step_stamps.clear()
         return done
 
     # -- reference path -------------------------------------------------------

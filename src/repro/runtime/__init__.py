@@ -1,6 +1,11 @@
 from repro.runtime.fault import (FaultInjector, StragglerMonitor,
                                  run_with_restarts)
 from repro.runtime.elastic import ElasticPlan, reshard_tree
+from repro.runtime.autotune import (CostModel, SearchResult, SimResult,
+                                    TraceLog, apply_overlay, autotune,
+                                    config_overlay, replay)
 
 __all__ = ["FaultInjector", "StragglerMonitor", "run_with_restarts",
-           "ElasticPlan", "reshard_tree"]
+           "ElasticPlan", "reshard_tree",
+           "TraceLog", "CostModel", "SimResult", "SearchResult",
+           "replay", "autotune", "config_overlay", "apply_overlay"]

@@ -270,3 +270,37 @@ def test_straggler_escalation_triggers_warm_replacement(tmp_path):
             rids):
         assert sup.streams[rid] == ref, rid
     sup.close()
+
+
+def test_straggler_detection_off_reports_but_never_replaces(tmp_path):
+    """ScaleConfig(straggler_detection=False): the same sustained
+    straggler is still OBSERVED (escalations count up, summaries report
+    it) but the scale pass never spawns a replacement — the named switch
+    benchmarks use instead of a magic 1e9 threshold."""
+    ecfg = _engine_cfg()
+    ccfg = ClusterConfig(
+        engine=ecfg, replicas=2, health_interval=1,
+        store_dir=str(tmp_path / "store"),
+        journal_dir=str(tmp_path / "journals"),
+        scale=ScaleConfig(min_replicas=1, max_replicas=2,
+                          high_watermark=5.0, low_watermark=0.0,
+                          sustain_window=3, cooldown=0,
+                          straggler_detection=False))
+
+    def degrade(step):
+        if step >= 6:
+            time.sleep(0.02)
+
+    sup = Supervisor(ARCH, ccfg, fault_hooks={0: degrade})
+    work = [(np.asarray([3, 1, 4, 1, 5], np.int32), 20),
+            (np.arange(2, 6), 3), (np.arange(4, 9), 3)]
+    rids = [sup.submit(p, max_new=m) for p, m in work]
+    stats = sup.run()
+    # observed, reported — but never acted on
+    assert sup.replicas[0].monitor.escalations >= 1
+    assert sup.replicas[0].state == "running"
+    assert [e for e in stats["scale_events"]
+            if e["action"] == "replace"] == []
+    assert len(sup.replicas) == 2 and stats["running_replicas"] == 2
+    assert stats["completed_all"] and sorted(sup.streams) == rids
+    sup.close()
